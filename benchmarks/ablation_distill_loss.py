@@ -1,0 +1,51 @@
+"""Ablation: distillation objective for the deep path — the paper's
+Eq. 3 is L2-on-predictions; Hinton-style KL is the deep-learning
+default. Same teachers, same proxy, same steps; report student NLL."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import deepfed
+from repro.data import make_federated_lm_data, token_batches
+from repro.models.config import ModelConfig
+
+from benchmarks.common import csv_row
+
+
+def run():
+    cfg = ModelConfig(
+        name="abl", n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=12,
+        d_ff=96, vocab=61, dtype=jnp.float32,
+    )
+    M, steps, B, S = 3, 25, 4, 24
+    clients = make_federated_lm_data(M, cfg.vocab, 3000, seed=0)
+    wins = jnp.asarray(np.stack([
+        np.stack([next(it) for _ in range(steps)])
+        for it in (token_batches(c, B, S, seed=1) for c in clients)
+    ]))
+    stacked = deepfed.stacked_init(cfg, M, jax.random.PRNGKey(0))
+    stacked, _ = deepfed.make_local_train(cfg, lr=4e-3)(stacked, wins)
+    test = jnp.asarray(np.stack(
+        [next(token_batches(clients[i % M], B, S, seed=7)) for i in range(4)]
+    ))
+    proxy = jnp.asarray(np.stack(
+        [next(token_batches(clients[i % M], B, S, seed=13)) for i in range(M)]
+    ))
+    ens_nll = deepfed.ensemble_eval_loss(stacked, cfg, test)
+    rows = [csv_row("ablation.distill.teacher_ensemble_nll", f"{ens_nll:.4f}", "")]
+    for kind in ("l2", "kl"):
+        student, dl = deepfed.distill_to_student(
+            cfg, cfg, stacked, proxy, steps=30, lr=4e-3, loss_kind=kind
+        )
+        s_nll = deepfed.ensemble_eval_loss(jax.tree.map(lambda x: x[None], student), cfg, test)
+        rows.append(csv_row(
+            f"ablation.distill.{kind}_student_nll", f"{s_nll:.4f}",
+            f"paper Eq.3 analogue" if kind == "l2" else "Hinton KL, T=2",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

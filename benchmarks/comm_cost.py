@@ -1,0 +1,102 @@
+"""Communication-cost table (the paper's motivation, quantified):
+one-shot ensemble / one-shot distilled / one-shot parameter averaging /
+iterative FedAvg — protocol bytes AND accuracy on the same federated
+split. Linear models are used for the averaging/FedAvg baselines (the
+regime where averaging is classically valid [8]); the RBF one-shot
+numbers come from the protocol run."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    one_shot_average_linear,
+    run_fedavg,
+    train_linear_svm,
+)
+from repro.data import make_dataset
+from repro.data.partition import split_train_test_val
+from repro.utils.metrics import roc_auc
+
+from benchmarks.common import SCALES, csv_row
+from benchmarks.fig1_mean_auc import protocol_result
+
+
+def run(dataset: str = "gleam"):
+    rows = []
+    # --- one-shot RBF protocol numbers (upload bytes + AUC) ---
+    res = protocol_result(dataset, distill_proxy=100)
+    best_strat = max(res.best, key=res.best.get)
+    best_k = max(res.ensemble_auc[best_strat], key=res.ensemble_auc[best_strat].get)
+    up = res.comm_bytes[f"upload_{best_strat}_k{best_k}"]
+    rows.append(csv_row(f"comm.{dataset}.one_shot_ensemble.bytes_up", int(up),
+                        f"{best_strat} k={best_k}, 1 round"))
+    rows.append(csv_row(f"comm.{dataset}.one_shot_ensemble.auc",
+                        f"{res.best[best_strat]:.4f}", ""))
+    if "download_distilled" in res.comm_bytes:
+        rows.append(csv_row(f"comm.{dataset}.distilled.bytes_down_per_device",
+                            int(res.comm_bytes["download_distilled"]),
+                            f"vs ensemble {int(res.comm_bytes['download_ensemble'])}"))
+        rows.append(csv_row(
+            f"comm.{dataset}.distilled.auc",
+            f"{list(res.ensemble_auc['distilled'].values())[0]:.4f}", ""))
+
+    # --- linear-model baselines on the same split ---
+    ds = make_dataset(dataset, seed=0, scale=SCALES[dataset])
+    splits = [split_train_test_val(d, seed=i) for i, d in enumerate(ds.devices)]
+    test_sets = [(s["test"].x, s["test"].y) for s in splits]
+
+    def mean_auc(predict):
+        return float(np.mean([roc_auc(y, predict(x)) for x, y in test_sets]))
+
+    locals_ = [train_linear_svm(s["train"].x, s["train"].y, seed=i) for i, s in enumerate(splits)]
+    model_bytes = locals_[0].nbytes
+    m = len(locals_)
+    avg = one_shot_average_linear(locals_, weights=[s["train"].n for s in splits])
+    rows.append(csv_row(f"comm.{dataset}.one_shot_param_avg.bytes_up", int(model_bytes * m),
+                        "1 round, all devices [8]"))
+    rows.append(csv_row(f"comm.{dataset}.one_shot_param_avg.auc", f"{mean_auc(avg.predict):.4f}",
+                        "naive averaging baseline"))
+
+    # FedAvg: R rounds of local pegasos + averaging
+    import jax.numpy as jnp
+
+    datasets = [(s["train"].x, s["train"].y) for s in splits]
+
+    def local(params, data, rnd):
+        x, y = data
+        m2 = train_linear_svm(x, y, epochs=2, seed=rnd)
+        # warm start approximated by averaging with incoming params
+        return {"w": 0.5 * (jnp.asarray(m2.w) + params["w"]), "b": 0.5 * (m2.b + params["b"])}
+
+    rounds, cpr = 10, min(10, m)
+    fa = run_fedavg(
+        {"w": jnp.zeros(ds.dim), "b": jnp.zeros(())},
+        datasets,
+        local,
+        rounds=rounds,
+        clients_per_round=cpr,
+        eval_fn=None,
+        weights_fn=lambda d: len(d[1]),
+    )
+    from repro.core.averaging import LinearSVM
+
+    fam = LinearSVM(w=np.asarray(fa.params["w"]), b=float(fa.params["b"]))
+    rows.append(csv_row(f"comm.{dataset}.fedavg.bytes_total", int(fa.comm_bytes),
+                        f"{rounds} rounds x {cpr} clients x up+down (linear model)"))
+    rows.append(csv_row(f"comm.{dataset}.fedavg.auc", f"{mean_auc(fam.predict):.4f}", ""))
+    # bytes are not comparable across model classes (RBF models carry
+    # support vectors; linear models are d floats) — the protocol-level
+    # quantity is DEVICE-ROUNDS: one participation per selected device
+    # vs 2x per sampled client per round.
+    rows.append(csv_row(
+        f"comm.{dataset}.device_rounds.one_shot", best_k, "single upload each"
+    ))
+    rows.append(csv_row(
+        f"comm.{dataset}.device_rounds.fedavg", rounds * cpr,
+        f"{rounds * cpr / max(best_k, 1):.0f}x more device participations",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

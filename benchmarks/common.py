@@ -1,0 +1,23 @@
+"""Shared benchmark helpers. Scales chosen so each benchmark finishes in
+minutes on one CPU while preserving the paper's device-count regimes."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+# per-dataset scale factors for CPU benchmarks (paper runs full scale)
+SCALES = {"gleam": 1.0, "emnist": 0.02, "sent140": 0.02}
+KS = (1, 10, 50, 100)
+
+
+def timeit_us(fn: Callable, repeats: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def csv_row(name: str, value, derived: str = "") -> str:
+    return f"{name},{value},{derived}"

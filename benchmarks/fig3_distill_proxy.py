@@ -1,0 +1,51 @@
+"""Figure 3: distilled model vs ensemble as proxy data grows (avg of
+trials). The distilled model should approach the ensemble with
+relatively few proxy samples."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Ensemble, distill_svm, run_protocol
+from repro.core.protocol import _mean_auc_over_devices, _train_device
+from repro.core.selection import select
+from repro.core.svm import default_gamma
+from repro.data import make_dataset
+
+from benchmarks.common import SCALES, csv_row
+
+PROXY_SIZES = (10, 25, 50, 100, 200)
+TRIALS = 3
+
+
+def run(dataset: str = "gleam"):
+    ds = make_dataset(dataset, seed=0, scale=SCALES[dataset])
+    devices = [
+        _train_device(i, dev, ds.min_samples, 0.01, 0) for i, dev in enumerate(ds.devices)
+    ]
+    reports = [d.report for d in devices]
+    by_id = {d.device_id: d for d in devices}
+    k = min(10, sum(r.eligible for r in reports))
+    ids = select("cv", reports, k)
+    ens = Ensemble([by_id[i].model for i in ids])
+    ens_auc, _ = _mean_auc_over_devices(devices, ens.predict)
+    rows = [csv_row(f"fig3.{dataset}.ensemble", f"{ens_auc:.4f}", f"cv k={k} teacher")]
+    val_x = np.concatenate([d.splits["val"].x for d in devices])
+    for l in PROXY_SIZES:
+        if l > len(val_x):
+            continue
+        aucs = []
+        for t in range(TRIALS):
+            rng = np.random.default_rng(100 + t)
+            proxy = val_x[rng.choice(len(val_x), l, replace=False)]
+            student = distill_svm(ens.predict, proxy, gamma=default_gamma(proxy))
+            auc, _ = _mean_auc_over_devices(devices, student.predict)
+            aucs.append(auc)
+        rows.append(csv_row(
+            f"fig3.{dataset}.distilled_l{l}", f"{np.mean(aucs):.4f}",
+            f"gap_to_ensemble={ens_auc - np.mean(aucs):+.4f} ({TRIALS} trials)",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

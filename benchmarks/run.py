@@ -1,0 +1,48 @@
+"""Benchmark orchestrator — one module per paper table/figure, plus the
+communication-cost and kernel micro-benchmarks. Prints
+``name,value,derived`` CSV (one row per measured quantity)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        ablation_distill_loss,
+        comm_cost,
+        fig1_mean_auc,
+        fig2_score_distribution,
+        fig3_distill_proxy,
+        futurework_bench,
+        kernel_bench,
+        table1_datasets,
+    )
+
+    suites = [
+        ("table1", table1_datasets.run),
+        ("fig1", fig1_mean_auc.run),
+        ("fig2", fig2_score_distribution.run),
+        ("fig3", fig3_distill_proxy.run),
+        ("comm", comm_cost.run),
+        ("kernels", kernel_bench.run),
+        ("ablation", ablation_distill_loss.run),
+        ("futurework", futurework_bench.run),
+    ]
+    print("name,value,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row)
+            print(f"_meta.{name}.seconds,{time.time() - t0:.1f},")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"_meta.{name}.ERROR,{type(e).__name__},{e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Table 1: summary of federated datasets (device counts, sample ranges).
+
+Validates the synthetic generators against the paper's published stats.
+"""
+from __future__ import annotations
+
+from repro.data import make_dataset
+
+from benchmarks.common import SCALES, csv_row
+
+PAPER = {
+    "emnist": dict(total=406_048, devices=3_462, dmin=10, dmax=460),
+    "sent140": dict(total=161_966, devices=4_000, dmin=21, dmax=345),
+    "gleam": dict(total=2_469, devices=38, dmin=33, dmax=99),
+}
+
+
+def run(full_scale: bool = False):
+    rows = []
+    for name, ref in PAPER.items():
+        scale = 1.0 if full_scale else SCALES[name]
+        ds = make_dataset(name, seed=0, scale=scale)
+        sizes = [d.n for d in ds.devices]
+        rows.append(csv_row(
+            f"table1.{name}.devices", ds.n_devices,
+            f"paper={ref['devices']} scale={scale}",
+        ))
+        rows.append(csv_row(
+            f"table1.{name}.total_samples", ds.total_samples,
+            f"paper={ref['total']} (scaled {int(ref['total'] * scale)})",
+        ))
+        rows.append(csv_row(
+            f"table1.{name}.min_max", f"{min(sizes)}/{max(sizes)}",
+            f"paper={ref['dmin']}/{ref['dmax']}",
+        ))
+        rows.append(csv_row(
+            f"table1.{name}.eligible_devices", len(ds.eligible()),
+            f"min_samples={ds.min_samples}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

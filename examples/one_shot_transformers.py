@@ -1,0 +1,34 @@
+"""End-to-end driver: one-shot federated learning with TRANSFORMER
+clients (the paper's "easily extended to non-convex models", realized on
+the assigned architectures).
+
+Four clients train reduced Llama-3.2 models to completion on disjoint
+non-IID token streams — in parallel, via vmap over the member axis (on a
+real mesh this axis shards over 'data': zero cross-client communication,
+exactly the one-shot premise). The server then ensembles their token
+distributions and distills the ensemble into a single student in ONE
+communication round, and compares protocol bytes against FedAvg.
+
+  PYTHONPATH=src python examples/one_shot_transformers.py
+"""
+from repro.launch.fed_run import main as fed_run
+
+
+def main():
+    report = fed_run([
+        "--arch", "llama3.2-1b",
+        "--clients", "4",
+        "--local-steps", "40",
+        "--distill-steps", "40",
+        "--batch", "4",
+        "--seq", "32",
+        "--lr", "3e-3",
+    ])
+    assert report["ensemble_nll"] < report["single_member_nll"], "ensemble must beat a single member"
+    print(f"\nensemble beats single member by "
+          f"{report['single_member_nll'] - report['ensemble_nll']:.3f} nats; "
+          f"one-shot uses {report['comm_reduction_vs_fedavg10']:.1f}x fewer bytes than FedAvg-10")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Checkpointing: pytree <-> npz with a json manifest.
+
+Flat-key encoding preserves nesting via '/'-joined paths; the manifest
+records the treedef so arbitrary (dict/list/tuple) pytrees round-trip.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    arrays, treedef = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "treedef": str(treedef),
+        "nbytes": int(sum(a.nbytes for a in arrays.values())),
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return path
+
+
+def restore_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    flat, treedef = jax.tree.flatten_with_path(like)
+    leaves = []
+    for pathkeys, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pathkeys)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with max_to_keep retention."""
+
+    def __init__(self, root: str, max_to_keep: int = 3):
+        self.root = root
+        self.max_to_keep = max_to_keep
+        os.makedirs(root, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def all_steps(self):
+        steps = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_"):
+                steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def save(self, step: int, tree: Any) -> str:
+        path = save_checkpoint(self._step_dir(step), tree, step=step)
+        steps = self.all_steps()
+        while len(steps) > self.max_to_keep:
+            shutil.rmtree(self._step_dir(steps.pop(0)), ignore_errors=True)
+        return path
+
+    def restore_latest(self, like: Any):
+        steps = self.all_steps()
+        if not steps:
+            return None, None
+        step = steps[-1]
+        return restore_checkpoint(self._step_dir(step), like), step

@@ -1,0 +1,175 @@
+"""One-shot federated learning for transformer families ("deep path").
+
+The paper's protocol applied to the assigned architectures: each client
+trains a model of the SAME family (one-shot FL requires completion, not
+homogeneity, but homogeneous members let us member-stack). All member
+params are stacked on a leading axis and trained with ``jax.vmap`` — on
+a mesh the member axis shards over 'data', which is the TPU-native
+rendition of "thousands of devices training independently, zero
+cross-device communication until the single upload".
+
+Server side: ensemble prediction = mean of member token distributions;
+distillation trains a (possibly larger, possibly different-architecture)
+student against the ensemble's soft labels on proxy tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (
+    ModelConfig,
+    ShardCtx,
+    forward_train,
+    init_params,
+    lm_loss,
+    make_train_step,
+)
+from repro.core.distill import DISTILL_LOSSES
+from repro.optim import adamw, apply_updates, chain, clip_by_global_norm
+from repro.utils.trees import tree_size_bytes
+
+
+def stacked_init(cfg: ModelConfig, n_members: int, key):
+    keys = jax.random.split(key, n_members)
+    return jax.vmap(lambda k: init_params(cfg, k))(keys)
+
+
+def make_local_train(cfg: ModelConfig, lr: float = 1e-3, ctx: ShardCtx = ShardCtx()):
+    """Returns train_many(stacked_params, member_tokens) vmapped over the
+    member axis; member_tokens: (M, steps, B, S+1)."""
+    opt = chain(clip_by_global_norm(1.0), adamw(lr))
+    step_fn = make_train_step(cfg, opt, ctx)
+
+    def train_one(params, token_windows):
+        opt_state = opt.init(params)
+
+        def body(carry, window):
+            params, opt_state = carry
+            batch = {"tokens": window[:, :-1], "labels": window[:, 1:]}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            return (params, opt_state), metrics["loss"]
+
+        (params, _), losses = jax.lax.scan(body, (params, opt_state), token_windows)
+        return params, losses
+
+    return jax.jit(jax.vmap(train_one))
+
+
+def member_log_probs(stacked_params, cfg: ModelConfig, tokens, ctx: ShardCtx = ShardCtx()):
+    """(M members) log-probs for each member. tokens: (B, S)."""
+
+    def one(params):
+        logits, _ = forward_train(params, cfg, ctx, {"tokens": tokens, "labels": tokens})
+        return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+    return jax.vmap(one)(stacked_params)  # (M, B, S, V)
+
+
+def ensemble_log_probs(stacked_params, cfg: ModelConfig, tokens, ctx: ShardCtx = ShardCtx()):
+    """log of the mean member distribution (the paper's mean-prediction
+    ensemble in token-distribution space)."""
+    lp = member_log_probs(stacked_params, cfg, tokens, ctx)
+    return jax.scipy.special.logsumexp(lp, axis=0) - jnp.log(lp.shape[0])
+
+
+def ensemble_eval_loss(stacked_params, cfg: ModelConfig, windows, ctx: ShardCtx = ShardCtx()):
+    """Mean next-token NLL of the ensemble over (N, B, S+1) windows."""
+    total, count = 0.0, 0
+    for w in windows:
+        lp = ensemble_log_probs(stacked_params, cfg, w[:, :-1], ctx)
+        gold = jnp.take_along_axis(lp, w[:, 1:][..., None], axis=-1)[..., 0]
+        total += float(-gold.mean())
+        count += 1
+    return total / max(count, 1)
+
+
+def make_distill_step(
+    student_cfg: ModelConfig,
+    optimizer,
+    loss_kind: str = "kl",
+    temperature: float = 2.0,
+    ctx: ShardCtx = ShardCtx(),
+):
+    """Distillation train step: student vs precomputed teacher logits.
+
+    batch = {tokens (B,S), labels (B,S), teacher_logits (B,S,V)}.
+    Mirrors make_train_step so pjit shardings apply identically.
+    """
+    loss_fn_t = DISTILL_LOSSES[loss_kind]
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = forward_train(p, student_cfg, ctx, batch)
+            if loss_kind == "kl":
+                dl = loss_fn_t(logits, batch["teacher_logits"], temperature)
+            else:
+                dl = loss_fn_t(logits, batch["teacher_logits"])
+            loss = dl + student_cfg.router_aux_coef * aux
+            return loss, {"loss": loss, "distill": dl}
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return step
+
+
+def distill_to_student(
+    student_cfg: ModelConfig,
+    teacher_cfg: ModelConfig,
+    stacked_teacher_params,
+    proxy_windows,  # (N, B, S+1) token windows of proxy data
+    steps: int,
+    lr: float = 1e-3,
+    loss_kind: str = "kl",
+    seed: int = 0,
+    ctx: ShardCtx = ShardCtx(),
+):
+    """Server-side distillation of the member ensemble into one student."""
+    key = jax.random.PRNGKey(seed)
+    params = init_params(student_cfg, key)
+    opt = chain(clip_by_global_norm(1.0), adamw(lr))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_distill_step(student_cfg, opt, loss_kind, ctx=ctx))
+
+    @jax.jit
+    def teacher_fn(tokens):
+        return ensemble_log_probs(stacked_teacher_params, teacher_cfg, tokens, ctx)
+
+    losses = []
+    n = len(proxy_windows)
+    for i in range(steps):
+        w = proxy_windows[i % n]
+        tokens, labels = w[:, :-1], w[:, 1:]
+        t_logits = teacher_fn(tokens)
+        batch = {"tokens": tokens, "labels": labels, "teacher_logits": t_logits}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    return params, losses
+
+
+# ----------------------------------------------------------------------
+# communication accounting (protocol bytes, not mesh collectives)
+# ----------------------------------------------------------------------
+
+def one_shot_comm_bytes(member_params, n_selected: int, student_params=None, n_devices: int = 0) -> Dict[str, float]:
+    member_bytes = tree_size_bytes(jax.tree.map(lambda x: x[0], member_params))
+    out = {
+        "upload": float(member_bytes * n_selected),
+        "rounds": 1.0,
+    }
+    if student_params is not None and n_devices:
+        out["download"] = float(tree_size_bytes(student_params) * n_devices)
+    return out
+
+
+def fedavg_comm_bytes(params, rounds: int, clients_per_round: int) -> Dict[str, float]:
+    b = tree_size_bytes(params)
+    return {"total": float(2.0 * b * rounds * clients_per_round), "rounds": float(rounds)}

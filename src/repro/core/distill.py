@@ -1,0 +1,64 @@
+"""Server-side distillation (Section 3, Eq. 3) — semi-supervised setting.
+
+SVM path (paper-faithful): given unlabeled proxy points x'_1..x'_l and
+teacher soft labels F_k(x'_i), fit a student kernel expansion
+    min_{alpha'} (1/l) sum_i (F(x'_i) - sum_j alpha'_j k(x'_j, x'_i))^2
+which is exactly kernel (ridge) regression on the soft labels. We add a
+tiny ridge eps*I for conditioning (the paper's pure least-squares is
+recovered as eps -> 0). The distilled model needs only the PROXY points
+— device support vectors never leave the server: the paper's privacy
+argument.
+
+Transformer path (the paper's "easily extended to non-convex models"):
+the student trains on proxy tokens against the ensemble's mean
+distribution, with either L2-on-logits (the direct Eq. 3 analogue) or
+KL (Hinton-style); both are provided and ablated in the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.svm import SVMModel, rbf_gram
+
+
+def distill_svm(
+    teacher_predict: Callable[[np.ndarray], np.ndarray],
+    proxy_x: np.ndarray,
+    gamma: float,
+    eps: float = 1e-6,
+) -> SVMModel:
+    """Distill any teacher (ensemble) into a single kernel expansion."""
+    soft = jnp.asarray(teacher_predict(proxy_x), jnp.float32)  # F_k(x')
+    xp = jnp.asarray(proxy_x, jnp.float32)
+    K = rbf_gram(xp, xp, gamma)  # (l, l)
+    alpha = jnp.linalg.solve(K + eps * jnp.eye(K.shape[0]), soft)
+    return SVMModel(
+        support_x=np.asarray(proxy_x, np.float32),
+        coef=np.asarray(alpha, np.float32),
+        gamma=gamma,
+    )
+
+
+# ----------------------------------------------------------------------
+# transformer distillation losses
+# ----------------------------------------------------------------------
+
+def distill_loss_l2(student_logits, teacher_logits):
+    """Eq. 3 analogue: L2 between prediction vectors."""
+    diff = student_logits.astype(jnp.float32) - teacher_logits.astype(jnp.float32)
+    return jnp.mean(jnp.square(diff))
+
+
+def distill_loss_kl(student_logits, teacher_logits, temperature: float = 1.0):
+    """KL(teacher || student) at temperature T (Hinton et al. 2015)."""
+    t = temperature
+    tp = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    return jnp.mean(jnp.sum(jnp.exp(tp) * (tp - sp), axis=-1)) * t * t
+
+
+DISTILL_LOSSES = {"l2": distill_loss_l2, "kl": distill_loss_kl}

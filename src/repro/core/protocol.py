@@ -1,0 +1,197 @@
+"""One-shot federated learning protocol simulation (the paper, end to end).
+
+Simulates the full round on a federated dataset:
+  1. every device splits its data 50/40/10 (train/test/val);
+  2. devices train local RBF-SVMs to completion (data-deficient devices
+     fall back to constant classifiers — the paper's local baseline);
+  3. devices report scalar metadata (n_train, val AUC);
+  4. the server selects k models per strategy (cv / data / random) and
+     receives them — the SINGLE round of communication;
+  5. ensembles are evaluated on every device's test split (mean AUC);
+  6. optionally, the server distills the best ensemble on proxy data.
+
+Communication accounting counts protocol bytes (uploaded model sizes,
+downloaded global model) — the quantity the paper optimizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.svm import SVMModel, ConstantModel, train_svm, default_gamma
+from repro.core.ensemble import Ensemble
+from repro.core.selection import DeviceReport, select
+from repro.core.distill import distill_svm
+from repro.data.federated import FederatedDataset, DeviceData
+from repro.data.partition import split_train_test_val, pool_devices
+from repro.utils.metrics import roc_auc
+from repro.utils.logging import get_logger
+
+log = get_logger("protocol")
+
+
+@dataclasses.dataclass
+class DeviceState:
+    device_id: int
+    splits: Dict[str, DeviceData]
+    model: object  # SVMModel | ConstantModel
+    report: DeviceReport
+
+
+@dataclasses.dataclass
+class ProtocolResult:
+    dataset: str
+    local_mean_auc: float
+    ideal_mean_auc: float
+    ensemble_auc: Dict[str, Dict[int, float]]  # strategy -> k -> mean AUC
+    full_ensemble_auc: float
+    best: Dict[str, float]  # strategy -> best-k mean AUC
+    comm_bytes: Dict[str, float]
+    per_device: Dict[str, np.ndarray]
+
+    def relative_gain_over_local(self) -> float:
+        b = max(self.best.values())
+        return (b - self.local_mean_auc) / max(self.local_mean_auc, 1e-9)
+
+    def fraction_of_ideal(self) -> float:
+        return max(self.best.values()) / max(self.ideal_mean_auc, 1e-9)
+
+
+def _train_device(dev_id: int, dev: DeviceData, min_samples: int, lam: float, seed: int) -> DeviceState:
+    splits = split_train_test_val(dev, seed=seed + dev_id)
+    tr, va = splits["train"], splits["val"]
+    if dev.n < min_samples or len(np.unique(tr.y)) < 2:
+        model = ConstantModel(float(np.mean(tr.y)))
+        report = DeviceReport(dev_id, tr.n, 0.5, eligible=False)
+        return DeviceState(dev_id, splits, model, report)
+    model = train_svm(tr.x, tr.y, lam=lam)
+    val_auc = roc_auc(va.y, model.predict(va.x))
+    return DeviceState(dev_id, splits, model, DeviceReport(dev_id, tr.n, val_auc, eligible=True))
+
+
+def _mean_auc_over_devices(devices: Sequence[DeviceState], scores_fn) -> tuple:
+    """scores_fn(X) -> scores. Evaluates once on concatenated test sets."""
+    xs = np.concatenate([d.splits["test"].x for d in devices])
+    scores = scores_fn(xs)
+    aucs = []
+    off = 0
+    for d in devices:
+        n = d.splits["test"].n
+        aucs.append(roc_auc(d.splits["test"].y, scores[off : off + n]))
+        off += n
+    return float(np.mean(aucs)), np.array(aucs)
+
+
+def run_protocol(
+    dataset: FederatedDataset,
+    ks: Sequence[int] = (1, 10, 50, 100),
+    strategies: Sequence[str] = ("cv", "data", "random"),
+    lam: float = 0.01,
+    seed: int = 0,
+    ideal_cap: int = 2000,
+    random_trials: int = 5,
+    distill_proxy: int = 0,
+) -> ProtocolResult:
+    m = dataset.n_devices
+    log.info("training %d local models (%s)", m, dataset.name)
+    devices = [
+        _train_device(i, dev, dataset.min_samples, lam, seed)
+        for i, dev in enumerate(dataset.devices)
+    ]
+    reports = [d.report for d in devices]
+    svm_bytes = {d.device_id: d.model.nbytes for d in devices}
+
+    # --- local baseline (paper Fig. 1 "local") ---
+    local_aucs = []
+    for d in devices:
+        te = d.splits["test"]
+        local_aucs.append(roc_auc(te.y, d.model.predict(te.x)))
+    local_mean = float(np.mean(local_aucs))
+
+    # --- unattainable ideal: pooled-data SVM (subsampled for tractability) ---
+    pooled = pool_devices([d.splits["train"] for d in devices])
+    rng = np.random.default_rng(seed)
+    if len(pooled.y) > ideal_cap:
+        idx = rng.choice(len(pooled.y), ideal_cap, replace=False)
+        pooled = DeviceData(pooled.x[idx], pooled.y[idx])
+    ideal_model = train_svm(pooled.x, pooled.y, lam=lam)
+    ideal_mean, ideal_aucs = _mean_auc_over_devices(devices, ideal_model.predict)
+
+    # --- ensembles per strategy and k ---
+    by_id = {d.device_id: d for d in devices}
+    ensemble_auc: Dict[str, Dict[int, float]] = {}
+    comm: Dict[str, float] = {"metadata_upload": 16.0 * m}
+    for strat in strategies:
+        ensemble_auc[strat] = {}
+        for k in ks:
+            if strat == "random":
+                trials = []
+                for t in range(random_trials):
+                    ids = select("random", reports, k, seed=seed + 17 * t)
+                    if not ids:
+                        continue
+                    ens = Ensemble([by_id[i].model for i in ids])
+                    auc, _ = _mean_auc_over_devices(devices, ens.predict)
+                    trials.append(auc)
+                if trials:
+                    ensemble_auc[strat][k] = float(np.mean(trials))
+                ids = select("random", reports, k, seed=seed)
+            else:
+                ids = select(strat, reports, k)
+                if not ids:
+                    continue
+                ens = Ensemble([by_id[i].model for i in ids])
+                auc, _ = _mean_auc_over_devices(devices, ens.predict)
+                ensemble_auc[strat][k] = auc
+            comm[f"upload_{strat}_k{k}"] = float(sum(svm_bytes[i] for i in ids))
+        log.info("%s/%s: %s", dataset.name, strat, ensemble_auc[strat])
+
+    # --- full ensemble of all eligible devices ---
+    eligible_ids = [r.device_id for r in reports if r.eligible]
+    full_ens = Ensemble([by_id[i].model for i in eligible_ids])
+    full_auc, full_aucs = _mean_auc_over_devices(devices, full_ens.predict)
+    comm["upload_full"] = float(sum(svm_bytes[i] for i in eligible_ids))
+
+    best = {s: max(v.values()) for s, v in ensemble_auc.items() if v}
+    result = ProtocolResult(
+        dataset=dataset.name,
+        local_mean_auc=local_mean,
+        ideal_mean_auc=ideal_mean,
+        ensemble_auc=ensemble_auc,
+        full_ensemble_auc=full_auc,
+        best=best,
+        comm_bytes=comm,
+        per_device={
+            "local": np.array(local_aucs),
+            "ideal": ideal_aucs,
+            "full_ensemble": full_aucs,
+        },
+    )
+    # --- optional distillation of the best ensemble ---
+    if distill_proxy > 0:
+        best_strat = max(best, key=best.get)
+        best_k = max(result.ensemble_auc[best_strat], key=result.ensemble_auc[best_strat].get)
+        ids = select(best_strat, reports, best_k) if best_strat != "random" else select(
+            "random", reports, best_k, seed=seed
+        )
+        ens = Ensemble([by_id[i].model for i in ids])
+        proxy = _proxy_from_validation(devices, distill_proxy, rng)
+        gamma = default_gamma(proxy)
+        student = distill_svm(ens.predict, proxy, gamma)
+        dist_auc, dist_aucs = _mean_auc_over_devices(devices, student.predict)
+        result.per_device["distilled"] = dist_aucs
+        result.comm_bytes["download_distilled"] = float(student.nbytes)
+        result.comm_bytes["download_ensemble"] = float(ens.nbytes)
+        result.ensemble_auc.setdefault("distilled", {})[best_k] = dist_auc
+    return result
+
+
+def _proxy_from_validation(devices: Sequence[DeviceState], n: int, rng) -> np.ndarray:
+    """Paper protocol: proxy data sampled from validation data across
+    devices (unlabeled — only features are used)."""
+    xs = np.concatenate([d.splits["val"].x for d in devices])
+    if len(xs) > n:
+        xs = xs[rng.choice(len(xs), n, replace=False)]
+    return xs

@@ -1,0 +1,69 @@
+"""Ensemble selection strategies (Section 3).
+
+Devices below the dataset's min-sample threshold never participate
+(paper Section 4); strategies then choose k <= m of the eligible local
+models. Selection controls client->server communication: only selected
+devices upload their models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DeviceReport:
+    """What the server knows about a device before any model upload
+    (scalars only — this is the cheap pre-round metadata exchange)."""
+
+    device_id: int
+    n_train: int
+    val_auc: float
+    eligible: bool
+
+
+def cv_selection(
+    reports: Sequence[DeviceReport], k: int, auc_baseline: float = 0.5
+) -> List[int]:
+    """Cross-Validation selection: devices share models only if their
+    local validation AUC clears the server-set baseline; server keeps
+    the k best performers."""
+    cands = [r for r in reports if r.eligible and r.val_auc >= auc_baseline]
+    cands.sort(key=lambda r: (-r.val_auc, r.device_id))
+    return [r.device_id for r in cands[:k]]
+
+
+def data_selection(
+    reports: Sequence[DeviceReport], k: int, min_train: int = 0
+) -> List[int]:
+    """Data selection: devices share models only if they hold enough
+    local training data; server keeps the k largest datasets."""
+    cands = [r for r in reports if r.eligible and r.n_train >= min_train]
+    cands.sort(key=lambda r: (-r.n_train, r.device_id))
+    return [r.device_id for r in cands[:k]]
+
+
+def random_selection(
+    reports: Sequence[DeviceReport], k: int, seed: int = 0
+) -> List[int]:
+    """Random selection: the server samples k eligible devices."""
+    cands = [r.device_id for r in reports if r.eligible]
+    rng = np.random.default_rng(seed)
+    if len(cands) <= k:
+        return list(cands)
+    return list(rng.choice(cands, size=k, replace=False))
+
+
+STRATEGIES = {
+    "cv": cv_selection,
+    "data": data_selection,
+    "random": random_selection,
+}
+
+
+def select(strategy: str, reports: Sequence[DeviceReport], k: int, **kw) -> List[int]:
+    if strategy not in STRATEGIES:
+        raise KeyError(f"unknown strategy {strategy!r}; options {sorted(STRATEGIES)}")
+    return STRATEGIES[strategy](reports, k, **kw)

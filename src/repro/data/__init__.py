@@ -1,0 +1,25 @@
+from repro.data.federated import (
+    DeviceData,
+    FederatedDataset,
+    make_emnist_like,
+    make_sent140_like,
+    make_gleam_like,
+    make_dataset,
+    DATASETS,
+)
+from repro.data.partition import dirichlet_partition, split_train_test_val
+from repro.data.lm_data import make_federated_lm_data, token_batches
+
+__all__ = [
+    "DeviceData",
+    "FederatedDataset",
+    "make_emnist_like",
+    "make_sent140_like",
+    "make_gleam_like",
+    "make_dataset",
+    "DATASETS",
+    "dirichlet_partition",
+    "split_train_test_val",
+    "make_federated_lm_data",
+    "token_batches",
+]

@@ -1,0 +1,61 @@
+"""Partitioning utilities: per-device splits and Dirichlet non-IID sharding."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.data.federated import DeviceData
+
+
+def split_train_test_val(
+    device: DeviceData, seed: int = 0, fractions=(0.5, 0.4, 0.1)
+) -> Dict[str, DeviceData]:
+    """Paper protocol: 50/40/10 train/test/validation split per device."""
+    assert abs(sum(fractions) - 1.0) < 1e-9
+    rng = np.random.default_rng(seed)
+    n = device.n
+    perm = rng.permutation(n)
+    n_train = max(int(round(fractions[0] * n)), 1)
+    n_test = max(int(round(fractions[1] * n)), 1)
+    idx_train = perm[:n_train]
+    idx_test = perm[n_train : n_train + n_test]
+    idx_val = perm[n_train + n_test :]
+    if len(idx_val) == 0:  # tiny devices: reuse a train point for val
+        idx_val = perm[:1]
+    mk = lambda idx: DeviceData(x=device.x[idx], y=device.y[idx])
+    return {"train": mk(idx_train), "test": mk(idx_test), "val": mk(idx_val)}
+
+
+def dirichlet_partition(
+    x: np.ndarray, y: np.ndarray, n_devices: int, alpha: float = 0.3, seed: int = 0
+) -> List[DeviceData]:
+    """Classic non-IID federated partition: per-class Dirichlet allocation.
+
+    Lower ``alpha`` -> more skewed per-device label distributions.
+    """
+    rng = np.random.default_rng(seed)
+    classes = np.unique(y)
+    device_indices: List[List[int]] = [[] for _ in range(n_devices)]
+    for c in classes:
+        idx = np.flatnonzero(y == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(alpha * np.ones(n_devices))
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for dev, chunk in enumerate(np.split(idx, cuts)):
+            device_indices[dev].extend(chunk.tolist())
+    out = []
+    for dev in range(n_devices):
+        idx = np.array(sorted(device_indices[dev]), dtype=int)
+        if len(idx) == 0:  # guarantee non-empty devices
+            idx = rng.integers(0, len(y), size=1)
+        out.append(DeviceData(x=x[idx], y=y[idx]))
+    return out
+
+
+def pool_devices(devices: List[DeviceData]) -> DeviceData:
+    """Aggregate all device data (the paper's 'unattainable ideal' input)."""
+    return DeviceData(
+        x=np.concatenate([d.x for d in devices], axis=0),
+        y=np.concatenate([d.y for d in devices], axis=0),
+    )

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+rbf_gram.py         Gram matrix for the paper's kernel SVMs (MXU matmul
+                    + fused exp epilogue in VMEM)
+flash_attention.py  blocked online-softmax GQA attention for the
+                    transformer serve/train paths
+ops.py              jit'd wrappers with platform dispatch
+ref.py              pure-jnp oracles (ground truth in tests)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

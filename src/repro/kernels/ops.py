@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends call the Pallas kernels compiled;
+elsewhere (this CPU container) call the pure-jnp oracle, unless
+``REPRO_PALLAS_INTERPRET=1`` forces the kernels through interpret mode
+(used by the test suite to validate kernel bodies on CPU).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.rbf_gram import rbf_gram_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _force_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _rbf_tpu(x1, x2, gamma):
+    return rbf_gram_pallas(x1, x2, gamma)
+
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _rbf_ref(x1, x2, gamma):
+    return ref.rbf_gram_ref(x1, x2, gamma)
+
+
+def rbf_gram(x1, x2, gamma: float):
+    gamma = float(gamma)
+    if _on_tpu():
+        return _rbf_tpu(x1, x2, gamma)
+    if _force_interpret():
+        return rbf_gram_pallas(x1, x2, gamma, interpret=True)
+    return _rbf_ref(x1, x2, gamma)
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def _flash_tpu(q, k, v, causal, window):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def _flash_ref(q, k, v, causal, window):
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    if _on_tpu():
+        return _flash_tpu(q, k, v, causal, window)
+    if _force_interpret():
+        return flash_attention_pallas(q, k, v, causal=causal, window=window, interpret=True)
+    return _flash_ref(q, k, v, causal, window)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def rbf_gram_ref(x1, x2, gamma: float):
+    """exp(-gamma ||x1_i - x2_j||^2). x1: (m, d), x2: (n, d) -> (m, n)."""
+    x1 = x1.astype(jnp.float32)
+    x2 = x2.astype(jnp.float32)
+    sq1 = jnp.sum(x1 * x1, axis=1)[:, None]
+    sq2 = jnp.sum(x2 * x2, axis=1)[None, :]
+    cross = x1 @ x2.T
+    d2 = jnp.maximum(sq1 + sq2 - 2.0 * cross, 0.0)
+    return jnp.exp(-gamma * d2)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Dense GQA attention oracle.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, K, hd). Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    rep = H // K
+    qg = q.reshape(B, Sq, K, rep, hd)
+    logits = jnp.einsum("bskrh,btkh->bkrst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,btkh->bskrh", probs, v)
+    return out.reshape(B, Sq, H, hd)

@@ -1,0 +1,4 @@
+"""Launchers: mesh factory, dry-run, train/serve drivers, one-shot FL run."""
+from repro.launch.mesh import make_production_mesh, make_debug_mesh, mesh_chips
+
+__all__ = ["make_production_mesh", "make_debug_mesh", "mesh_chips"]

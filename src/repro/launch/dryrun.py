@@ -1,0 +1,380 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+Proves the distribution config is coherent without hardware: pjit
+partitions every step over the production mesh, ``compile()`` must
+succeed, and the compiled artifact yields the roofline terms
+(cost_analysis + collective bytes parsed from the HLO).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results.json
+  python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k \
+      --fsdp --remat dots --tag fsdp_remat
+"""
+# The VERY FIRST lines, before ANY other import: jax locks the device
+# count at first init, and the dry-run needs 512 placeholder devices.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, VARIANTS, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch import specs as S
+from repro.models import (
+    ShardCtx,
+    abstract_params,
+    logical_axes,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+)
+from repro.models.config import active_param_count
+from repro.sharding.rules import ShardingRules, logical_to_spec
+from repro.roofline import V5E, collective_bytes_from_hlo, roofline_report
+from repro.utils.logging import get_logger
+
+log = get_logger("dryrun")
+
+
+def shardings_for(mesh, abstract_tree, logical_tree, rules):
+    return jax.tree.map(
+        lambda a, l: NamedSharding(mesh, logical_to_spec(a.shape, l, mesh, rules)),
+        abstract_tree,
+        logical_tree,
+    )
+
+
+def build_lowering(cfg, shape, mesh, rules):
+    """Returns jax.jit(step).lower(*abstract_args)."""
+    ctx = ShardCtx(mesh=mesh, rules=rules)
+    params_abs = abstract_params(cfg)
+    params_la = logical_axes(cfg)
+    params_sh = shardings_for(mesh, params_abs, params_la, rules)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = S.make_optimizer()
+        step = make_train_step(cfg, opt, ctx)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = shardings_for(mesh, opt_abs, S.opt_state_logical(cfg), rules)
+        batch_abs, batch_la = S.batch_specs(cfg, shape)
+        batch_sh = shardings_for(mesh, batch_abs, batch_la, rules)
+        metrics_sh = {"loss": repl, "ce": repl, "aux": repl}
+        jitted = jax.jit(
+            step,
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, metrics_sh),
+        )
+        return jitted.lower(params_abs, opt_abs, batch_abs)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, ctx)
+        batch_abs, batch_la = S.batch_specs(cfg, shape)
+        batch_sh = shardings_for(mesh, batch_abs, batch_la, rules)
+        cache_abs, cache_la = S.prefill_cache_specs(cfg, shape)
+        cache_sh = shardings_for(mesh, cache_abs, cache_la, rules)
+        logits_sh = NamedSharding(
+            mesh, logical_to_spec((shape.global_batch, cfg.vocab), ("batch", "vocab"), mesh, rules)
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(params_sh, batch_sh, cache_sh),
+            out_shardings=(logits_sh, cache_sh),
+        )
+        return jitted.lower(params_abs, batch_abs, cache_abs)
+
+    # decode
+    step = make_decode_step(cfg, ctx)
+    (tokens_abs, cache_abs), (tok_la, cache_la) = S.decode_specs(cfg, shape)
+    tok_sh = shardings_for(mesh, tokens_abs, tok_la, rules)
+    cache_sh = shardings_for(mesh, cache_abs, cache_la, rules)
+    logits_sh = NamedSharding(
+        mesh, logical_to_spec((shape.global_batch, cfg.vocab), ("batch", "vocab"), mesh, rules)
+    )
+    jitted = jax.jit(
+        step,
+        in_shardings=(params_sh, tok_sh, cache_sh),
+        out_shardings=(logits_sh, cache_sh),
+    )
+    return jitted.lower(params_abs, tokens_abs, cache_abs)
+
+
+def _cost_of(compiled):
+    """(flops, bytes, collectives dict) of one compiled module."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return flops, bytes_accessed, coll
+
+
+def _probe_depth(cfg, k: int):
+    """Config with k superblocks (and proportionally scaled encoder)."""
+    p = cfg.period()
+    kw = {"n_layers": k * p}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = max(1, round(cfg.encoder_layers * k / cfg.n_superblocks))
+    return cfg.replace(**kw)
+
+
+def extrapolated_cost(cfg, shape, mesh, rules):
+    """XLA cost_analysis counts a scan body ONCE (not x trip count); all
+    layer stacks here are scanned. Probe compiles at depth 1 and 2
+    superblocks with the layer scan UNROLLED give (base + layer) and
+    (base + 2*layer); extrapolating linearly to the real depth is exact
+    because scan iterations are structurally identical. Inner
+    blocked-attention / SSD chunk loops stay rolled in the probes; their
+    closed-form cost is added by roofline.analytic.inner_scan_cost.
+    """
+    from repro.roofline.analytic import inner_scan_cost
+
+    n = cfg.n_superblocks
+    probe = cfg.replace(scan_unroll=True)
+    # probe depths (2, 4) when deep enough: depth-1 modules can take
+    # different SPMD/fusion choices than deeper ones (observed under
+    # expert-parallel sharding), breaking the linear model.
+    d_lo, d_hi = (2, 4) if n >= 4 else (1, 2)
+    d_lo, d_hi = min(d_lo, n), min(d_hi, n)
+    c_lo = _cost_of(build_lowering(_probe_depth(probe, d_lo), shape, mesh, rules).compile())
+    if n == 1 or d_hi == d_lo:
+        flops, bytes_, coll = c_lo
+    else:
+        c_hi = _cost_of(build_lowering(_probe_depth(probe, d_hi), shape, mesh, rules).compile())
+        span = d_hi - d_lo
+
+        def ex(a, b):
+            slope = (b - a) / span
+            if slope < 0:  # non-linear probes: proportional fallback
+                return b * n / d_hi
+            return a + (n - d_lo) * slope
+
+        flops = ex(c_lo[0], c_hi[0])
+        bytes_ = ex(c_lo[1], c_hi[1])
+        coll = {k: int(ex(c_lo[2][k], c_hi[2][k])) for k in c_lo[2]}
+    extra_flops, extra_bytes = inner_scan_cost(cfg, shape, mesh)
+    return flops + extra_flops, bytes_ + extra_bytes, coll
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def run_one(
+    arch: str, shape_name: str, multi_pod: bool, fsdp: bool, remat: str, tag: str,
+    cast_grads: bool = False, moe_local: bool = False, block_skip: bool = False,
+    shard_kv_seq: bool = False, replicate_embed: bool = False,
+    shard_attn_seq: bool = False, expert_parallel: bool = False,
+):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": tag,
+        "fsdp": fsdp,
+        "remat": remat,
+        "levers": {
+            "cast_grads": cast_grads,
+            "moe_local": moe_local,
+            "block_skip": block_skip,
+            "shard_kv_seq": shard_kv_seq,
+            "replicate_embed": replicate_embed,
+            "shard_attn_seq": shard_attn_seq,
+            "expert_parallel": expert_parallel,
+        },
+    }
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = (
+            "long_500k requires sub-quadratic attention; "
+            f"{arch} is pure full-attention (see DESIGN.md)"
+        )
+        return rec
+    cfg = cfg.replace(
+        remat=remat,
+        cast_grads=cast_grads,
+        moe_local_dispatch=moe_local,
+        attn_block_skip=block_skip,
+        shard_attn_seq=shard_attn_seq,
+    )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    rules = ShardingRules(fsdp=fsdp)
+    updates = {}
+    if shard_kv_seq:
+        updates["kv_seq"] = "data"
+    if replicate_embed:
+        updates["vocab_in"] = None
+    if shard_attn_seq:
+        updates["attn_q_seq"] = "model"
+    if expert_parallel:
+        # experts claim the model axis; expert ffn dim falls back to
+        # replicated automatically (used-axis dedup in logical_to_spec)
+        updates["experts"] = "model"
+    if updates:
+        rules = rules.replace(table_updates=updates)
+    t0 = time.time()
+    try:
+        lowered = build_lowering(cfg, shape, mesh, rules)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        return rec
+
+    rec["status"] = "ok"
+    rec["t_lower_s"] = round(t_lower, 2)
+    rec["t_compile_s"] = round(t_compile, 2)
+
+    # ---- memory analysis (proves it fits) ----
+    try:
+        ma = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        rec["peak_bytes_per_chip"] = int(
+            rec.get("argument_size_in_bytes", 0) + rec.get("temp_size_in_bytes", 0)
+        )
+    except Exception as e:  # some backends lack memory_analysis
+        rec["memory_analysis_error"] = str(e)
+
+    # ---- cost analysis: raw (scan-undercounted) + depth-extrapolated ----
+    try:
+        raw_flops, raw_bytes, raw_coll = _cost_of(compiled)
+        rec["raw_hlo_flops_per_chip"] = raw_flops
+        rec["raw_hlo_bytes_per_chip"] = raw_bytes
+        rec["raw_collectives"] = {k: int(v) for k, v in raw_coll.items()}
+    except Exception as e:
+        rec["cost_analysis_error"] = str(e)
+
+    try:
+        t0 = time.time()
+        flops, bytes_accessed, coll = extrapolated_cost(cfg, shape, mesh, rules)
+        rec["t_probe_s"] = round(time.time() - t0, 2)
+        rec["hlo_flops_per_chip"] = flops
+        rec["hlo_bytes_per_chip"] = bytes_accessed
+        rec["collectives"] = {k: int(v) for k, v in coll.items()}
+        coll_bytes = float(coll["total"])
+    except Exception as e:
+        rec["extrapolation_error"] = f"{type(e).__name__}: {e}"
+        flops = rec.get("raw_hlo_flops_per_chip", 0.0)
+        bytes_accessed = rec.get("raw_hlo_bytes_per_chip", 0.0)
+        coll_bytes = float(rec.get("raw_collectives", {}).get("total", 0.0))
+
+    mf = model_flops(cfg, shape)
+    rl = roofline_report(
+        flops_per_chip=flops,
+        bytes_per_chip=bytes_accessed,
+        collective_bytes_per_chip=coll_bytes,
+        model_flops=mf,
+        chips=chips,
+    )
+    rec["roofline"] = {
+        k: (v if isinstance(v, str) else float(v)) for k, v in rl.items()
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (see repro.configs)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="full (arch x shape) matrix")
+    ap.add_argument("--fsdp", action="store_true", help="shard params+opt over data axis")
+    ap.add_argument("--remat", default="none", choices=["none", "dots", "full"])
+    ap.add_argument("--cast-grads", action="store_true", help="bf16 trunk activation grads")
+    ap.add_argument("--moe-local", action="store_true", help="per-row MoE dispatch")
+    ap.add_argument("--block-skip", action="store_true", help="skip masked attention KV blocks")
+    ap.add_argument("--shard-kv-seq", action="store_true", help="shard KV cache along sequence")
+    ap.add_argument("--replicate-embed", action="store_true",
+                    help="replicate the input embedding table (kills lookup all-reduce)")
+    ap.add_argument("--shard-attn-seq", action="store_true",
+                    help="context-parallel attention over the model axis")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="shard MoE experts over the model axis (weights E/16 per chip)")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default=None, help="append results to this JSON file")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    store = {}
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            store = json.load(f)
+
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                key = f"{arch}|{shape_name}|{'multi' if multi else 'single'}|{args.tag}"
+                if key in store and store[key].get("status") == "ok":
+                    log.info("cached: %s", key)
+                    results.append(store[key])
+                    continue
+                log.info("lowering %s", key)
+                rec = run_one(
+                    arch, shape_name, multi, args.fsdp, args.remat, args.tag,
+                    cast_grads=args.cast_grads, moe_local=args.moe_local,
+                    block_skip=args.block_skip, shard_kv_seq=args.shard_kv_seq,
+                    replicate_embed=args.replicate_embed,
+                    shard_attn_seq=args.shard_attn_seq,
+                    expert_parallel=args.expert_parallel,
+                )
+                log.info(
+                    "%s -> %s (lower %.1fs compile %.1fs) %s",
+                    key,
+                    rec["status"],
+                    rec.get("t_lower_s", 0),
+                    rec.get("t_compile_s", 0),
+                    rec.get("roofline", {}).get("dominant", rec.get("reason", rec.get("error", ""))),
+                )
+                results.append(rec)
+                store[key] = rec
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(store, f, indent=1)
+
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skip = sum(1 for r in results if r["status"] == "skipped")
+    err = sum(1 for r in results if r["status"] == "error")
+    print(f"\ndry-run complete: {ok} ok, {skip} skipped, {err} errors / {len(results)} combos")
+    for r in results:
+        if r["status"] == "error":
+            print(f"  ERROR {r['arch']}|{r['shape']}|{r['mesh']}: {r['error'][:200]}")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh factory (TPU v5e pods).
+
+Function, not module-level constant: importing this module never touches
+jax device state (device count is locked at first jax init, and only
+dryrun.py requests 512 placeholder host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many real devices exist (tests)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod(mesh.devices.shape))

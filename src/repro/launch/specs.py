@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct input stand-ins + logical axes for every step kind.
+
+Everything the dry-run lowers is built here with NO device allocation:
+params/optimizer state/caches/batches are all abstract. The same logical
+axis trees drive real shardings in train.py / serve.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models import ModelConfig, abstract_params, logical_axes, abstract_cache, cache_logical_axes
+from repro.optim import adamw, chain, clip_by_global_norm
+
+
+def make_optimizer(lr: float = 3e-4):
+    return chain(clip_by_global_norm(1.0), adamw(lr, weight_decay=0.1))
+
+
+def abstract_opt_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    opt = make_optimizer()
+    return jax.eval_shape(opt.init, params)
+
+
+def opt_state_logical(cfg: ModelConfig):
+    """Logical axes for chain(clip, adamw) state: moments mirror params."""
+    la = logical_axes(cfg)
+    return ({}, {"step": (), "mu": la, "nu": la})
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(abstract batch, logical axes) for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    la = {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+    }
+    if cfg.n_patches:
+        batch["patches"] = sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        la["patches"] = ("batch", None, "embed")
+    if cfg.is_encdec:
+        batch["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        la["frames"] = ("batch", None, "embed")
+    if shape.kind == "prefill":
+        del batch["labels"], la["labels"]
+    return batch, la
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    """(abstract (tokens, cache), logical axes) for one decode step."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = abstract_cache(cfg, B, kv_len=S)
+    la_tokens = ("batch", None)
+    la_cache = cache_logical_axes(cfg, B, kv_len=S)
+    return (tokens, cache), (la_tokens, la_cache)
+
+
+def prefill_cache_specs(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    return abstract_cache(cfg, B, kv_len=S), cache_logical_axes(cfg, B, kv_len=S)

@@ -1,0 +1,39 @@
+from repro.models.config import ModelConfig, param_count, active_param_count
+from repro.models.params import init_params, abstract_params, logical_axes, model_specs
+from repro.models.layers import ShardCtx, blocked_attention
+from repro.models.model import (
+    forward_train,
+    forward_prefill,
+    forward_decode,
+    init_cache,
+    abstract_cache,
+    cache_logical_axes,
+    lm_loss,
+    make_train_step,
+    make_eval_step,
+    make_prefill_step,
+    make_decode_step,
+)
+
+__all__ = [
+    "ModelConfig",
+    "param_count",
+    "active_param_count",
+    "init_params",
+    "abstract_params",
+    "logical_axes",
+    "model_specs",
+    "ShardCtx",
+    "blocked_attention",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "init_cache",
+    "abstract_cache",
+    "cache_logical_axes",
+    "lm_loss",
+    "make_train_step",
+    "make_eval_step",
+    "make_prefill_step",
+    "make_decode_step",
+]

@@ -1,0 +1,367 @@
+"""Model assembly: embeddings -> scanned super-blocks -> LM head.
+
+Three entry modes share one block implementation:
+  * train    — full-sequence forward, next-token CE loss
+  * prefill  — full-sequence forward that fills the KV/SSM cache,
+               returns last-position logits
+  * decode   — one token against the cache
+
+Layer stacks are consumed with ``jax.lax.scan`` over super-blocks (see
+ModelConfig.period) so HLO size is depth-independent; ``remat`` wraps
+the scan body for activation checkpointing.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ShardCtx, rms_norm
+from repro.models.ssm import mamba_mixer
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_cast(x, dtype):
+    """Identity forward; casts the cotangent to ``dtype`` on the way back.
+
+    The loss region runs in fp32 and, without this, the residual-trunk
+    gradient stays fp32 through every layer — doubling backward TP
+    all-reduce bytes and activation-gradient HBM traffic. One cast at
+    the trunk's top sends bf16 gradients up the whole stack.
+    """
+    return x
+
+
+def _grad_cast_fwd(x, dtype):
+    return x, None
+
+
+def _grad_cast_bwd(dtype, res, g):
+    return (g.astype(dtype),)
+
+
+_grad_cast.defvjp(_grad_cast_fwd, _grad_cast_bwd)
+
+
+# ----------------------------------------------------------------------
+# sub-layer
+# ----------------------------------------------------------------------
+
+def _apply_sublayer(x, p, kind, cfg: ModelConfig, ctx: ShardCtx, *, mode, positions, cache, enc_out, step, causal=True):
+    """One (mixer + ffn) sub-layer with pre-norm residuals."""
+    mixer_kind, ffn_kind = kind
+    new_cache = dict(cache) if cache is not None else None
+    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    if mixer_kind == "attn":
+        w = cfg.sliding_window
+        if mode == "train":
+            h = L.attention_dense(h, p["mixer"], cfg, ctx, positions, causal=causal, window=w)
+        elif mode == "prefill":
+            h, attn_cache = L.attention_prefill(h, p["mixer"], cfg, ctx, positions, cache["attn"], window=w)
+            new_cache["attn"] = attn_cache
+        else:  # decode
+            h, attn_cache = L.attention_decode(h, p["mixer"], cfg, ctx, step, cache["attn"], window=w)
+            new_cache["attn"] = attn_cache
+    else:  # mamba
+        mcache = cache["mamba"] if cache is not None else None
+        h, mcache = mamba_mixer(h, p["mixer"], cfg, ctx, cache=mcache, decode=(mode == "decode"))
+        if cache is not None:
+            new_cache["mamba"] = mcache
+    x = x + h
+    if "xattn" in p:  # encoder-decoder cross attention
+        h = rms_norm(x, p["norm_x"], cfg.rms_eps)
+        if mode == "decode":
+            enc_kv = (cache["xk"], cache["xv"])
+        else:
+            enc_kv = L.encode_kv(enc_out, p["xattn"], cfg, ctx)
+            if cache is not None:
+                new_cache["xk"] = enc_kv[0].astype(cache["xk"].dtype)
+                new_cache["xv"] = enc_kv[1].astype(cache["xv"].dtype)
+        h = L.cross_attention(h, p["xattn"], cfg, ctx, enc_kv)
+        x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind != "none":
+        h = rms_norm(x, p["norm2"], cfg.rms_eps)
+        if ffn_kind == "moe":
+            h, aux = L.moe(h, p["ffn"], cfg, ctx)
+        else:
+            h = L.mlp(h, p["ffn"], cfg, ctx)
+        x = x + h
+    x = ctx.c(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+def _remat_wrap(fn, cfg: ModelConfig, mode: str):
+    if mode != "train" or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_blocks(x, blocks_params, cfg: ModelConfig, ctx: ShardCtx, *, mode, positions, blocks_cache, enc_out, step, causal=True):
+    kinds = cfg.sublayer_kinds()
+    has_cache = blocks_cache is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        if has_cache:
+            p_list, c_list = xs
+        else:
+            (p_list,) = xs
+            c_list = tuple(None for _ in kinds)
+        out_caches = []
+        for p, c, kind in zip(p_list, c_list, kinds):
+            x, c_new, aux_j = _apply_sublayer(
+                x, p, kind, cfg, ctx,
+                mode=mode, positions=positions, cache=c, enc_out=enc_out,
+                step=step, causal=causal,
+            )
+            out_caches.append(c_new)
+            aux = aux + aux_j
+        ys = tuple(out_caches) if has_cache else None
+        return (x, aux), ys
+
+    body = _remat_wrap(body, cfg, mode)
+    xs = (tuple(blocks_params), tuple(blocks_cache)) if has_cache else (tuple(blocks_params),)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs, unroll=True if cfg.scan_unroll else 1
+    )
+    return x, (list(new_cache) if has_cache else None), aux
+
+
+# ----------------------------------------------------------------------
+# encoder (audio / enc-dec)
+# ----------------------------------------------------------------------
+
+def encode(params, frames, cfg: ModelConfig, ctx: ShardCtx):
+    """Encoder over stub frontend embeddings. frames: (B, S_enc, d)."""
+    x = frames.astype(cfg.dtype) + params["pos"][None, : frames.shape[1]]
+    x = ctx.c(x, "batch", "seq", "embed")
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    kinds = [("attn", "mlp")]
+
+    def body(carry, p):
+        x, aux = carry
+        x, _, a = _apply_sublayer(
+            x, p, kinds[0], cfg, ctx,
+            mode="train", positions=positions, cache=None, enc_out=None,
+            step=None, causal=False,
+        )
+        return (x, aux + a), None
+
+    (x, _), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"],
+        unroll=True if cfg.scan_unroll else 1,
+    )
+    return rms_norm(x, params["norm"], cfg.rms_eps)
+
+
+# ----------------------------------------------------------------------
+# forward passes
+# ----------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, ctx: ShardCtx, batch: Dict[str, Any]):
+    """Returns (logits over text positions, aux_loss)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    n_prefix = 0
+    if cfg.n_patches and "patches" in batch:
+        patches = batch["patches"].astype(cfg.dtype)
+        n_prefix = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+    x = ctx.c(x, "batch", "seq", "embed")
+    total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32), (B, total))
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params["encoder"], batch["frames"], cfg, ctx)
+    x, _, aux = _run_blocks(
+        x, params["blocks"], cfg, ctx,
+        mode="train", positions=positions, blocks_cache=None, enc_out=enc_out, step=None,
+    )
+    if cfg.cast_grads:
+        x = _grad_cast(x, cfg.dtype)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = ctx.c(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def forward_prefill(params, cfg: ModelConfig, ctx: ShardCtx, batch: Dict[str, Any], cache):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    n_prefix = 0
+    if cfg.n_patches and "patches" in batch:
+        patches = batch["patches"].astype(cfg.dtype)
+        n_prefix = patches.shape[1]
+        x = jnp.concatenate([patches, x], axis=1)
+    x = ctx.c(x, "batch", "seq", "embed")
+    total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32), (B, total))
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params["encoder"], batch["frames"], cfg, ctx)
+    x, new_blocks_cache, _ = _run_blocks(
+        x, params["blocks"], cfg, ctx,
+        mode="prefill", positions=positions, blocks_cache=cache["blocks"], enc_out=enc_out, step=None,
+    )
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_blocks_cache
+    new_cache["step"] = jnp.full((), total, jnp.int32)
+    return logits, new_cache
+
+
+def forward_decode(params, cfg: ModelConfig, ctx: ShardCtx, tokens, cache):
+    """tokens: (B, 1). Returns (logits (B, V), new cache)."""
+    step = cache["step"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.c(x, "batch", "seq", "embed")
+    x, new_blocks_cache, _ = _run_blocks(
+        x, params["blocks"], cfg, ctx,
+        mode="decode", positions=None, blocks_cache=cache["blocks"], enc_out=None, step=step,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    logits = ctx.c(logits, "batch", "vocab")
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_blocks_cache
+    new_cache["step"] = step + 1
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------------
+# KV / SSM cache
+# ----------------------------------------------------------------------
+
+def _sublayer_cache_spec(cfg: ModelConfig, kind, batch: int, kv_len: int):
+    """(shapes, logical, dtypes) triple-trees for one sub-layer's cache."""
+    mixer_kind, _ = kind
+    spec = {}
+    if mixer_kind == "attn":
+        W = min(cfg.sliding_window, kv_len) if cfg.sliding_window else kv_len
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        spec["attn"] = {
+            "k": ((batch, W, K, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), cfg.dtype),
+            "v": ((batch, W, K, hd), ("batch", "kv_seq", "kv_heads", "head_dim"), cfg.dtype),
+            "pos": ((batch, W), ("batch", "kv_seq"), jnp.int32),
+        }
+    else:
+        H, P, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * N
+        spec["mamba"] = {
+            "ssm": ((batch, H, N, P), ("batch", "ssm_heads", None, None), jnp.float32),
+            "conv": ((batch, cfg.ssm_conv - 1, conv_dim), ("batch", None, "ssm_inner"), cfg.dtype),
+        }
+    if cfg.is_encdec and mixer_kind == "attn":
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        spec["xk"] = ((batch, cfg.encoder_seq, K, hd), ("batch", None, "kv_heads", "head_dim"), cfg.dtype)
+        spec["xv"] = ((batch, cfg.encoder_seq, K, hd), ("batch", None, "kv_heads", "head_dim"), cfg.dtype)
+    return spec
+
+
+def cache_spec(cfg: ModelConfig, batch: int, kv_len: int):
+    """Full cache spec tree: leaves are (shape, logical, dtype)."""
+    n = cfg.n_superblocks
+    blocks = []
+    for kind in cfg.sublayer_kinds():
+        sub = _sublayer_cache_spec(cfg, kind, batch, kv_len)
+        sub = jax.tree.map(
+            lambda t: ((n,) + t[0], ("layers",) + t[1], t[2]),
+            sub,
+            is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], tuple),
+        )
+        blocks.append(sub)
+    return {"blocks": blocks, "step": ((), (), jnp.int32)}
+
+
+_SPEC_LEAF = lambda t: isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], tuple)
+
+
+def init_cache(cfg: ModelConfig, batch: int, kv_len: int):
+    def mk(t):
+        shape, _, dtype = t
+        if dtype == jnp.int32 and len(shape) >= 2:  # pos buffers start empty
+            return jnp.full(shape, -1, dtype)
+        return jnp.zeros(shape, dtype)
+
+    return jax.tree.map(mk, cache_spec(cfg, batch, kv_len), is_leaf=_SPEC_LEAF)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, kv_len: int):
+    return jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t[0], t[2]),
+        cache_spec(cfg, batch, kv_len),
+        is_leaf=_SPEC_LEAF,
+    )
+
+
+def cache_logical_axes(cfg: ModelConfig, batch: int, kv_len: int):
+    return jax.tree.map(lambda t: t[1], cache_spec(cfg, batch, kv_len), is_leaf=_SPEC_LEAF)
+
+
+# ----------------------------------------------------------------------
+# losses & steps
+# ----------------------------------------------------------------------
+
+def lm_loss(logits, labels, ignore_index: int = -1):
+    """Mean next-token CE over non-ignored positions. logits f32-safe."""
+    lg = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, ctx: ShardCtx):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = forward_train(p, cfg, ctx, batch)
+            ce = lm_loss(logits, batch["labels"])
+            loss = ce + cfg.router_aux_coef * aux
+            return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        from repro.optim import apply_updates
+
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, ctx: ShardCtx):
+    def eval_step(params, batch):
+        logits, _ = forward_train(params, cfg, ctx, batch)
+        return lm_loss(logits, batch["labels"])
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx):
+    def prefill(params, batch, cache):
+        return forward_prefill(params, cfg, ctx, batch, cache)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardCtx):
+    def decode(params, tokens, cache):
+        return forward_decode(params, cfg, ctx, tokens, cache)
+
+    return decode

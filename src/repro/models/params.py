@@ -1,0 +1,185 @@
+"""Parameter specs, initialization, abstract (dry-run) params, logical axes.
+
+A single spec tree drives three views that can never drift apart:
+  * ``init_params``      — materialized arrays (smoke tests, real training)
+  * ``abstract_params``  — ShapeDtypeStructs (dry-run lowering, NO allocation)
+  * ``logical_axes``     — per-dim logical names (sharding rules)
+
+Layer stacks carry a leading "layers" dim of size ``cfg.n_superblocks``
+and are consumed by ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: Any  # float std | "zeros" | "ones" | "a_log" | "dt_bias"
+    dtype: Any
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+# ----------------------------------------------------------------------
+# component specs
+# ----------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    out_std = 1.0 / np.sqrt(H * hd) / np.sqrt(2.0 * cfg.n_layers)
+    specs = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim"), 1 / np.sqrt(d), dt),
+        "wk": ParamSpec((d, K, hd), ("embed", "kv_heads", "head_dim"), 1 / np.sqrt(d), dt),
+        "wv": ParamSpec((d, K, hd), ("embed", "kv_heads", "head_dim"), 1 / np.sqrt(d), dt),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed"), out_std, dt),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), "zeros", dt)
+        specs["bk"] = ParamSpec((K, hd), ("kv_heads", "head_dim"), "zeros", dt)
+        specs["bv"] = ParamSpec((K, hd), ("kv_heads", "head_dim"), "zeros", dt)
+    return specs
+
+
+def _mlp_specs(cfg: ModelConfig) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    out_std = 1.0 / np.sqrt(f) / np.sqrt(2.0 * cfg.n_layers)
+    return {
+        "wg": ParamSpec((d, f), ("embed", "mlp"), 1 / np.sqrt(d), dt),
+        "wu": ParamSpec((d, f), ("embed", "mlp"), 1 / np.sqrt(d), dt),
+        "wd": ParamSpec((f, d), ("mlp", "embed"), out_std, dt),
+    }
+
+
+def _moe_specs(cfg: ModelConfig) -> dict:
+    d, f, E, dt = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.dtype
+    out_std = 1.0 / np.sqrt(f) / np.sqrt(2.0 * cfg.n_layers)
+    return {
+        "router": ParamSpec((d, E), ("embed", "experts"), 1 / np.sqrt(d), jnp.float32),
+        "wg": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp"), 1 / np.sqrt(d), dt),
+        "wu": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp"), 1 / np.sqrt(d), dt),
+        "wd": ParamSpec((E, f, d), ("experts", "expert_mlp", "embed"), out_std, dt),
+    }
+
+
+def _mamba_specs(cfg: ModelConfig) -> dict:
+    """Mamba2 block: in_proj -> [z | xBC | dt], depthwise conv on xBC,
+    SSD mixer, gated RMSNorm, out_proj. G (B/C groups) = 1."""
+    d, dt_ = cfg.d_model, cfg.dtype
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    G = 1
+    conv_dim = di + 2 * G * N
+    out_std = 1.0 / np.sqrt(di) / np.sqrt(2.0 * cfg.n_layers)
+    return {
+        "in_z": ParamSpec((d, di), ("embed", "ssm_inner"), 1 / np.sqrt(d), dt_),
+        "in_x": ParamSpec((d, di), ("embed", "ssm_inner"), 1 / np.sqrt(d), dt_),
+        "in_b": ParamSpec((d, G * N), ("embed", "ssm_state"), 1 / np.sqrt(d), dt_),
+        "in_c": ParamSpec((d, G * N), ("embed", "ssm_state"), 1 / np.sqrt(d), dt_),
+        "in_dt": ParamSpec((d, H), ("embed", "ssm_heads"), 1 / np.sqrt(d), dt_),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner"), 1 / np.sqrt(cfg.ssm_conv), dt_),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros", dt_),
+        "a_log": ParamSpec((H,), ("ssm_heads",), "a_log", jnp.float32),
+        "d_skip": ParamSpec((H,), ("ssm_heads",), "ones", jnp.float32),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), "dt_bias", jnp.float32),
+        "norm": ParamSpec((di,), ("ssm_inner",), "ones", jnp.float32),
+        "out": ParamSpec((di, d), ("ssm_inner", "embed"), out_std, dt_),
+    }
+
+
+def _norm(cfg: ModelConfig) -> ParamSpec:
+    return ParamSpec((cfg.d_model,), ("norm",), "ones", jnp.float32)
+
+
+def _sublayer_specs(cfg: ModelConfig, mixer: str, ffn: str, cross: bool) -> dict:
+    specs = {"norm1": _norm(cfg)}
+    specs["mixer"] = _attn_specs(cfg) if mixer == "attn" else _mamba_specs(cfg)
+    if cross:
+        specs["norm_x"] = _norm(cfg)
+        specs["xattn"] = _attn_specs(cfg)
+    if ffn != "none":
+        specs["norm2"] = _norm(cfg)
+        specs["ffn"] = _moe_specs(cfg) if ffn == "moe" else _mlp_specs(cfg)
+    return specs
+
+
+def _stack(specs, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.init, s.dtype),
+        specs,
+        is_leaf=_is_spec,
+    )
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab
+    cross = cfg.is_encdec
+    blocks = [
+        _stack(_sublayer_specs(cfg, mixer, ffn, cross), cfg.n_superblocks)
+        for (mixer, ffn) in cfg.sublayer_kinds()
+    ]
+    specs = {
+        # "vocab_in" (not "vocab"): the input table can be replicated
+        # independently of the lm_head to kill the lookup all-reduce
+        # (EXPERIMENTS.md §Perf) — default rules still shard it on model.
+        "embed": ParamSpec((V, d), ("vocab_in", "embed"), 0.02, cfg.dtype),
+        "blocks": blocks,
+        "final_norm": _norm(cfg),
+        "lm_head": ParamSpec((d, V), ("embed", "vocab"), 1 / np.sqrt(d), cfg.dtype),
+    }
+    if cfg.is_encdec:
+        specs["encoder"] = {
+            "pos": ParamSpec((cfg.encoder_seq, d), ("seq", "embed"), 0.02, cfg.dtype),
+            "blocks": _stack(
+                _sublayer_specs(cfg, "attn", "mlp", cross=False), cfg.encoder_layers
+            ),
+            "norm": _norm(cfg),
+        }
+    return specs
+
+
+# ----------------------------------------------------------------------
+# the three views
+# ----------------------------------------------------------------------
+
+def logical_axes(cfg: ModelConfig):
+    return jax.tree.map(lambda s: s.logical, model_specs(cfg), is_leaf=_is_spec)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), model_specs(cfg), is_leaf=_is_spec
+    )
+
+
+def _init_one(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "a_log":
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(spec.dtype)
+    if spec.init == "dt_bias":
+        dt = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(dt)).astype(spec.dtype)
+    std = float(spec.init)
+    return (std * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+def init_params(cfg: ModelConfig, key):
+    specs = model_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(s, k) for s, k in zip(leaves, keys)])

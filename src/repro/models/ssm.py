@@ -1,0 +1,159 @@
+"""Mamba2 (SSD — state-space duality) sequence mixer.
+
+Training/prefill uses the chunked SSD algorithm [arXiv:2405.21060]:
+quadratic attention-like form within chunks, linear scan across chunks.
+All decay terms are exp of differences of cumulative (negative) logs, so
+everything stays in (0, 1] — numerically safe in fp32.
+
+Decode is the O(1) recurrence h <- a h + dt B x, y = C.h + D x.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx, rms_norm
+
+
+def ssd_chunked(x, dt, a_neg, bmat, cmat, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x:    (B, S, H, P)  head inputs
+    dt:   (B, S, H)     discretization steps (post-softplus)
+    a_neg:(H,)          negative continuous-time decay (A = -exp(a_log))
+    bmat: (B, S, N)     input projections (G=1 group)
+    cmat: (B, S, N)     output projections
+    Returns y (B, S, H, P), h_final (B, H, N, P).
+    """
+    B, S, H, P = x.shape
+    N = bmat.shape[-1]
+    L = min(chunk, S)
+    # zero-pad to a chunk multiple: dt=0 padding is EXACT (log-decay 0,
+    # no state update, padded outputs sliced off below)
+    S_real = S
+    if S % L:
+        pad = L - S % L
+        pad_fn = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, bmat, cmat = pad_fn(x), pad_fn(dt), pad_fn(bmat), pad_fn(cmat)
+        S = S + pad
+    nc = S // L
+    split = lambda t: t.reshape((B, nc, L) + t.shape[2:]).swapaxes(0, 1)
+    xs = (split(x), split(dt), split(bmat), split(cmat))
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(h, blk):
+        xc, dtc, bc, cc = blk  # (B,L,H,P), (B,L,H), (B,L,N), (B,L,N)
+        la = dtc.astype(jnp.float32) * a_neg  # (B,L,H) negative
+        cs = jnp.cumsum(la, axis=1)  # inclusive cumulative log-decay
+        # ---- intra-chunk (quadratic form) ----
+        scores = jnp.einsum("bin,bjn->bij", cmat_f(cc), cmat_f(bc))  # (B,L,L)
+        decay = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (B,i,j,H)
+        m = scores[..., None] * decay * tri[None, :, :, None]  # (B,L,L,H)
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", m, dtc.astype(jnp.float32), xf(xc))
+        # ---- contribution of incoming state ----
+        y_inter = jnp.einsum("bin,bhnp->bihp", cmat_f(cc), h) * jnp.exp(cs)[..., None]
+        # ---- state update ----
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)  # (B,L,H)
+        s_c = jnp.einsum(
+            "bjn,bjh,bjhp->bhnp", cmat_f(bc), (dtc.astype(jnp.float32) * decay_to_end), xf(xc)
+        )
+        h_new = jnp.exp(cs[:, -1, :])[:, :, None, None] * h + s_c
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    cmat_f = lambda t: t.astype(jnp.float32)
+    xf = lambda t: t.astype(jnp.float32)
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    return y[:, :S_real], h_final
+
+
+def ssd_decode_step(x, dt, a_neg, bmat, cmat, h):
+    """Single-token recurrence.
+
+    x: (B,H,P), dt: (B,H), bmat/cmat: (B,N), h: (B,H,N,P).
+    """
+    la = dt.astype(jnp.float32) * a_neg  # (B,H)
+    a = jnp.exp(la)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bmat.astype(jnp.float32), dt.astype(jnp.float32), x.astype(jnp.float32))
+    h_new = a[:, :, None, None] * h + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), h_new)
+    return y.astype(x.dtype), h_new
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B,S,C); w: (K,C); b: (C,)."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    lhs = x.swapaxes(1, 2)  # (B, C, S)
+    rhs = w.swapaxes(0, 1)[:, None, :]  # (C, 1, K)
+    out = jax.lax.conv_general_dilated(
+        lhs.astype(jnp.float32),
+        rhs.astype(jnp.float32),
+        window_strides=(1,),
+        padding=[(K - 1, 0)],
+        feature_group_count=C,
+    )
+    return (out.swapaxes(1, 2) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_decode_step(x, w, b, state):
+    """x: (B,C) newest sample; state: (B,K-1,C) previous samples."""
+    window = jnp.concatenate([state, x[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(
+        jnp.float32
+    )
+    new_state = window[:, 1:]
+    return y.astype(x.dtype), new_state
+
+
+def mamba_mixer(x, p, cfg: ModelConfig, ctx: ShardCtx, cache: Optional[dict] = None, decode: bool = False):
+    """Full Mamba2 block mixer. x: (B,S,d). Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xin = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    bm = jnp.einsum("bsd,dn->bsn", x, p["in_b"])
+    cm = jnp.einsum("bsd,dn->bsn", x, p["in_c"])
+    dtr = jnp.einsum("bsd,dh->bsh", x, p["in_dt"])
+    xin = ctx.c(xin, "batch", "seq", "ssm_inner")
+    z = ctx.c(z, "batch", "seq", "ssm_inner")
+    xbc_pre = jnp.concatenate([xin, bm, cm], axis=-1)  # (B,S,conv_dim) pre-conv
+    new_cache = dict(cache) if cache is not None else None
+    if decode:
+        y_c, conv_state = conv_decode_step(xbc_pre[:, 0], p["conv_w"], p["conv_b"], cache["conv"])
+        xbc = y_c[:, None, :]
+        new_cache["conv"] = conv_state
+    else:
+        xbc = causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+        if cache is not None:
+            # conv state = last K-1 pre-conv samples (pad front if S short)
+            K = cfg.ssm_conv
+            pad = jnp.zeros((B, max(K - 1 - S, 0), xbc_pre.shape[-1]), xbc_pre.dtype)
+            tail = jnp.concatenate([pad, xbc_pre[:, max(S - (K - 1), 0) :]], axis=1)
+            new_cache["conv"] = tail[:, -(K - 1) :]
+    xbc = jax.nn.silu(xbc)
+    di = cfg.d_inner
+    xin, bm, cm = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xin.reshape(B, -1, H, P)
+    if decode:
+        y, h = ssd_decode_step(xh[:, 0], dt[:, 0], a_neg, bm[:, 0], cm[:, 0], cache["ssm"])
+        y = y[:, None]
+        new_cache["ssm"] = h
+    else:
+        h0 = cache["ssm"] if cache is not None else None
+        y, h = ssd_chunked(xh, dt, a_neg, bm, cm, cfg.ssm_chunk, h0)
+        if cache is not None:
+            new_cache["ssm"] = h
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, -1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    return out, new_cache

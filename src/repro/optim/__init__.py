@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    chain,
+)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "chain",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

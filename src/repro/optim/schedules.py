@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step -> lr), jit-safe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(peak: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def linear_warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    cos = cosine_decay(peak, max(total_steps - warmup_steps, 1), floor)
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

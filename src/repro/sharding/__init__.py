@@ -1,0 +1,15 @@
+from repro.sharding.rules import (
+    ShardingRules,
+    batch_axes,
+    shard_if_divisible,
+    param_sharding,
+    logical_to_spec,
+)
+
+__all__ = [
+    "ShardingRules",
+    "batch_axes",
+    "shard_if_divisible",
+    "param_sharding",
+    "logical_to_spec",
+]

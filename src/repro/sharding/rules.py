@@ -1,0 +1,134 @@
+"""Logical-axis based sharding rules.
+
+Model init functions return, alongside the param pytree, a matching
+pytree of *logical axis tuples* (one name per array dim, e.g.
+("vocab", "embed")). ``logical_to_spec`` maps logical names onto mesh
+axes via a ``ShardingRules`` table, dropping any assignment whose dim
+size is not divisible by the mesh-axis size (e.g. 2 kv-heads on a
+16-way model axis stay replicated). This keeps ONE model definition
+valid across every (arch x mesh) combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Default logical -> mesh-axis assignment (tensor-parallel flavour).
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "vocab_in": "model",  # input embedding table (see params.model_specs)
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": None,
+    "expert_mlp": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+    "layers": None,
+    "norm": None,
+    "batch": "data",  # data axis; launchers extend with "pod"
+    "seq": None,
+    "attn_q_seq": None,  # opt-in context-parallel attention (model axis)
+    # baseline: KV cache replicated along sequence. Opt-in optimization
+    # (see EXPERIMENTS.md §Perf): rules.replace(table_updates={"kv_seq":
+    # "data"}) shards long-context caches along sequence when batch
+    # can't use the data axis (long_500k batch=1).
+    "kv_seq": None,
+    "member": "data",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Assignment of logical axes to mesh axes, plus FSDP toggle.
+
+    ``fsdp`` additionally shards the designated fsdp_logical dims over
+    the data axis (ZeRO-3 analogue) — params AND optimizer state (which
+    mirrors params) get the same spec.
+    """
+
+    table: Tuple[Tuple[str, Optional[str]], ...] = tuple(sorted(DEFAULT_RULES.items()))
+    fsdp: bool = False
+    fsdp_axis: str = "data"
+    # logical dims eligible for FSDP sharding (weight dims not already
+    # claimed by tensor parallelism)
+    fsdp_logical: Tuple[str, ...] = ("embed",)
+
+    def lookup(self, logical: str) -> Optional[str]:
+        d = dict(self.table)
+        axis = d.get(logical)
+        if self.fsdp and axis is None and logical in self.fsdp_logical:
+            return self.fsdp_axis
+        return axis
+
+    def replace(self, **updates) -> "ShardingRules":
+        d = dict(self.table)
+        for k, v in updates.pop("table_updates", {}).items():
+            d[k] = v
+        return dataclasses.replace(self, table=tuple(sorted(d.items())), **updates)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes used for batch data parallelism (pod folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_if_divisible(dim_size: int, mesh: Mesh, axis) -> Optional[str]:
+    if axis is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    total = 1
+    for a in axes:
+        if a not in sizes:
+            return None
+        total *= sizes[a]
+    return axis if dim_size % total == 0 else None
+
+
+def logical_to_spec(shape, logical: Tuple[Optional[str], ...], mesh: Mesh, rules: ShardingRules) -> P:
+    """PartitionSpec for one array given its logical axes."""
+    assert len(shape) == len(logical), (shape, logical)
+    spec = []
+    used = set()
+    for size, name in zip(shape, logical):
+        axis = None if name is None else rules.lookup(name)
+        if name == "batch" and axis is not None:
+            # batch shards over (pod, data) together when pod exists
+            axis = batch_axes(mesh) or None
+            if axis is not None and len(axis) == 1:
+                axis = axis[0]
+        axis = shard_if_divisible(size, mesh, axis)
+        # a mesh axis may appear at most once in a spec
+        key = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+        if axis is not None and any(a in used for a in key):
+            axis = None
+        if axis is not None:
+            used.update(key)
+        spec.append(axis)
+    return P(*spec)
+
+
+def param_sharding(mesh: Mesh, params, logical_axes, rules: ShardingRules):
+    """NamedSharding pytree for params (or optimizer state mirroring them)."""
+
+    def one(p, names):
+        return NamedSharding(mesh, logical_to_spec(p.shape, names, mesh, rules))
+
+    return jax.tree.map(one, params, logical_axes)
+
+
+def spec_tree(mesh: Mesh, shapes, logical_axes, rules: ShardingRules):
+    """Like param_sharding but returns raw PartitionSpecs."""
+    return jax.tree.map(
+        lambda p, names: logical_to_spec(p.shape, names, mesh, rules), shapes, logical_axes
+    )

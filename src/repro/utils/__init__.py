@@ -1,0 +1,31 @@
+from repro.utils.trees import (
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_stack,
+    tree_unstack,
+    tree_index,
+    tree_mean,
+    tree_global_norm,
+    tree_size_bytes,
+    tree_count_params,
+)
+from repro.utils.metrics import roc_auc, accuracy, binary_cross_entropy
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_zeros_like",
+    "tree_add",
+    "tree_scale",
+    "tree_stack",
+    "tree_unstack",
+    "tree_index",
+    "tree_mean",
+    "tree_global_norm",
+    "tree_size_bytes",
+    "tree_count_params",
+    "roc_auc",
+    "accuracy",
+    "binary_cross_entropy",
+    "get_logger",
+]

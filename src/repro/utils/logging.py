@@ -1,0 +1,18 @@
+"""Minimal structured logger shared by launchers and benchmarks."""
+from __future__ import annotations
+
+import logging
+import sys
+
+_FMT = "%(asctime)s %(name)s %(levelname)s %(message)s"
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    logger = logging.getLogger(name)
+    if not logger.handlers:
+        h = logging.StreamHandler(sys.stderr)
+        h.setFormatter(logging.Formatter(_FMT, datefmt="%H:%M:%S"))
+        logger.addHandler(h)
+        logger.setLevel(logging.INFO)
+        logger.propagate = False
+    return logger

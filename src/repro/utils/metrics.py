@@ -1,0 +1,60 @@
+"""Evaluation metrics.
+
+The paper evaluates with ROC-AUC ("mean AUC across devices"). We
+implement AUC via the Mann-Whitney U rank statistic, which is exact and
+O(n log n); ties handled with midranks (matches sklearn.roc_auc_score).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _midranks(x: np.ndarray) -> np.ndarray:
+    order = np.argsort(x, kind="mergesort")
+    ranks = np.empty(len(x), dtype=np.float64)
+    sx = x[order]
+    i = 0
+    while i < len(sx):
+        j = i
+        while j + 1 < len(sx) and sx[j + 1] == sx[i]:
+            j += 1
+        ranks[order[i : j + 1]] = 0.5 * (i + j) + 1.0
+        i = j + 1
+    return ranks
+
+
+def roc_auc(labels, scores) -> float:
+    """ROC-AUC of binary ``labels`` (in {0,1} or {-1,+1}) given real scores.
+
+    Degenerate devices (single-class labels) return 0.5, matching the
+    convention used for the paper's constant classifiers.
+    """
+    labels = np.asarray(labels).astype(np.float64).ravel()
+    scores = np.asarray(scores).astype(np.float64).ravel()
+    labels = (labels > 0).astype(np.float64)  # {-1,+1} -> {0,1}
+    n_pos = labels.sum()
+    n_neg = len(labels) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    ranks = _midranks(scores)
+    u = ranks[labels == 1].sum() - n_pos * (n_pos + 1) / 2.0
+    return float(u / (n_pos * n_neg))
+
+
+def accuracy(labels, scores) -> float:
+    labels = np.asarray(labels).ravel()
+    preds = np.sign(np.asarray(scores).ravel())
+    preds = np.where(preds == 0, 1, preds)
+    labels = np.where(labels > 0, 1, -1)
+    return float((preds == labels).mean())
+
+
+def binary_cross_entropy(labels, logits):
+    """Mean BCE; labels in {-1,+1} or {0,1}."""
+    labels = jnp.asarray(labels)
+    labels01 = (labels > 0).astype(jnp.float32)
+    logits = jnp.asarray(logits).astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels01 + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,74 @@
+"""Pytree utilities used across the framework.
+
+Everything here is jit-safe (pure jnp) unless noted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_mean(trees):
+    """Mean of a list of pytrees with identical structure."""
+    n = len(trees)
+    out = trees[0]
+    for t in trees[1:]:
+        out = tree_add(out, t)
+    return tree_scale(out, 1.0 / n)
+
+
+def tree_stack(trees):
+    """Stack a list of pytrees along a new leading (member) axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree):
+    """Inverse of tree_stack: list of pytrees from a member-stacked tree."""
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    return [jax.tree.unflatten(treedef, [leaf[i] for leaf in leaves]) for i in range(n)]
+
+
+def tree_index(tree, i):
+    """Select member ``i`` from a member-stacked pytree (jit-safe)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_size_bytes(tree):
+    """Total bytes of all leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_count_params(tree):
+    return sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

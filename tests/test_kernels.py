@@ -1,0 +1,89 @@
+"""Pallas kernel validation: interpret-mode sweeps vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rbf_gram import rbf_gram_pallas
+
+
+@pytest.mark.parametrize("m,n,d", [(32, 32, 8), (50, 70, 16), (128, 128, 32), (200, 130, 4), (1, 300, 64)])
+@pytest.mark.parametrize("gamma", [0.1, 1.0])
+def test_rbf_gram_shapes(key, m, n, d, gamma):
+    k1, k2 = jax.random.split(key)
+    x1 = jax.random.normal(k1, (m, d))
+    x2 = jax.random.normal(k2, (n, d))
+    out = rbf_gram_pallas(x1, x2, gamma, block_m=64, block_n=64, interpret=True)
+    want = ref.rbf_gram_ref(x1, x2, gamma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+    assert out.shape == (m, n)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rbf_gram_dtypes(key, dtype):
+    x1 = jax.random.normal(key, (64, 16)).astype(dtype)
+    x2 = jax.random.normal(jax.random.fold_in(key, 1), (64, 16)).astype(dtype)
+    out = rbf_gram_pallas(x1, x2, 0.5, interpret=True)
+    want = ref.rbf_gram_ref(x1.astype(jnp.float32), x2.astype(jnp.float32), 0.5)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=tol)
+
+
+def test_rbf_gram_properties(key):
+    """K(X,X) symmetric PSD-ish with unit diagonal."""
+    x = jax.random.normal(key, (40, 8))
+    K = np.asarray(rbf_gram_pallas(x, x, 0.7, interpret=True))
+    np.testing.assert_allclose(K, K.T, atol=1e-5)
+    # diagonal ~1 up to catastrophic-cancellation noise in ||x||^2+||y||^2-2xy
+    np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-4)
+    assert (K >= 0).all() and (K <= 1 + 1e-4).all()
+
+
+@pytest.mark.parametrize(
+    "B,S,H,K,hd,window,causal",
+    [
+        (1, 128, 2, 1, 32, 0, True),
+        (2, 100, 4, 2, 32, 0, True),   # GQA + padded seq
+        (1, 200, 4, 4, 64, 48, True),  # sliding window
+        (1, 128, 2, 2, 32, 0, False),  # non-causal (encoder)
+        (2, 64, 8, 2, 16, 16, True),   # small window, high rep
+    ],
+)
+def test_flash_attention_sweep(key, B, S, H, K, hd, window, causal):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=64, block_k=64, interpret=True
+    )
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(key, dtype):
+    B, S, H, hd = 1, 128, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, H, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd)).astype(dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+    assert out.dtype == dtype
+
+
+def test_flash_attention_probability_conservation(key):
+    """With v = ones, attention output must be exactly ones."""
+    B, S, H, hd = 1, 96, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jnp.ones((B, S, H, hd))
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)

@@ -1,0 +1,143 @@
+"""Sharding rules + roofline HLO parsing (no multi-device requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.models import abstract_params, logical_axes
+from repro.roofline import collective_bytes_from_hlo, roofline_report
+from repro.sharding.rules import ShardingRules, batch_axes, logical_to_spec, shard_if_divisible
+
+
+class FakeMesh:
+    """Stand-in with the attrs logical_to_spec uses (no real devices)."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_shard_if_divisible():
+    assert shard_if_divisible(64, MESH, "model") == "model"
+    assert shard_if_divisible(10, MESH, "model") is None  # 10 % 16 != 0
+    assert shard_if_divisible(8, MESH, None) is None
+    assert shard_if_divisible(32, MESH3, ("pod", "data")) == ("pod", "data")
+    assert shard_if_divisible(33, MESH3, ("pod", "data")) is None
+
+
+def test_logical_to_spec_basic():
+    rules = ShardingRules()
+    spec = logical_to_spec((152064, 5120), ("vocab", "embed"), MESH, rules)
+    assert spec == P("model", None)
+    # kv_heads=2 or 8 not divisible by 16 -> replicated
+    spec = logical_to_spec((5120, 2, 128), ("embed", "kv_heads", "head_dim"), MESH, rules)
+    assert spec == P(None, None, None)
+    spec = logical_to_spec((5120, 8, 128), ("embed", "kv_heads", "head_dim"), MESH, rules)
+    assert spec == P(None, None, None)
+    # 32 q heads shard cleanly
+    spec = logical_to_spec((5120, 32, 128), ("embed", "heads", "head_dim"), MESH, rules)
+    assert spec == P(None, "model", None)
+
+
+def test_logical_to_spec_batch_folds_pod():
+    rules = ShardingRules()
+    spec = logical_to_spec((256, 4096), ("batch", "seq"), MESH3, rules)
+    assert spec == P(("pod", "data"), None)
+    spec = logical_to_spec((256, 4096), ("batch", "seq"), MESH, rules)
+    assert spec == P("data", None)
+    # baseline: cache replicated along sequence even when batch=1
+    spec = logical_to_spec((1, 524288, 8, 128), ("batch", "kv_seq", "kv_heads", "head_dim"), MESH, rules)
+    assert spec == P(None, None, None, None)
+    # opt-in long-context optimization: kv_seq shards over data
+    opt = rules.replace(table_updates={"kv_seq": "data"})
+    spec = logical_to_spec((1, 524288, 8, 128), ("batch", "kv_seq", "kv_heads", "head_dim"), MESH, opt)
+    assert spec == P(None, "data", None, None)
+    # with batch=128 the data axis is taken by batch; kv_seq falls back
+    spec = logical_to_spec((128, 32768, 8, 128), ("batch", "kv_seq", "kv_heads", "head_dim"), MESH, opt)
+    assert spec == P("data", None, None, None)
+
+
+def test_no_axis_used_twice():
+    rules = ShardingRules()
+    # both dims divisible and mapped to data -> second must fall back
+    spec = logical_to_spec((128, 524288), ("batch", "kv_seq"), MESH, rules)
+    assert spec == P("data", None)
+
+
+def test_fsdp_rules_shard_embed_dim():
+    plain = ShardingRules()
+    fsdp = ShardingRules(fsdp=True)
+    spec_p = logical_to_spec((4096, 14336), ("embed", "mlp"), MESH, plain)
+    spec_f = logical_to_spec((4096, 14336), ("embed", "mlp"), MESH, fsdp)
+    assert spec_p == P(None, "model")
+    assert spec_f == P("data", "model")
+
+
+def test_batch_axes():
+    assert batch_axes(MESH) == ("data",)
+    assert batch_axes(MESH3) == ("pod", "data")
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_every_param_has_logical_axes(arch):
+    cfg = ARCHS[arch]
+    ap = abstract_params(cfg)
+    la = logical_axes(cfg)
+    flat_p = jax.tree.leaves(ap)
+    flat_l = jax.tree.leaves(la, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_l)
+    for p, l in zip(flat_p, flat_l):
+        assert len(p.shape) == len(l), (p.shape, l)
+        # every logical name resolves under the default rules
+        logical_to_spec(p.shape, l, MESH3, ShardingRules())
+
+
+# ---------------- roofline HLO parsing ----------------
+
+HLO_SAMPLE = """
+HloModule test
+fused {
+  %x = bf16[16,512]{1,0} parameter(0)
+}
+ENTRY main {
+  %p0 = f32[256,1024]{1,0} parameter(0)
+  %ag = f32[256,2048]{1,0} all-gather(%p0), dimensions={1}
+  %ar = bf16[16,512]{1,0} all-reduce(%x), to_apply=%add
+  %t = (f32[128]{0}, f32[64]{0}) all-to-all(%a, %b)
+  %cp = f32[32,32]{1,0} collective-permute(%c)
+  %rs = f32[8,8]{1,0} reduce-scatter(%d), dimensions={0}
+  %ars = f32[100]{0} all-reduce-start(%e)
+  %ard = f32[100]{0} all-reduce-done(%ars)
+  %dot = f32[10,10]{1,0} dot(%p, %q)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes_from_hlo(HLO_SAMPLE)
+    assert out["all-gather"] == 256 * 2048 * 4
+    assert out["all-reduce"] == 16 * 512 * 2 + 100 * 4  # + async start, done skipped
+    assert out["all-to-all"] == (128 + 64) * 4
+    assert out["collective-permute"] == 32 * 32 * 4
+    assert out["reduce-scatter"] == 8 * 8 * 4
+    assert out["total"] == sum(
+        out[k] for k in ("all-gather", "all-reduce", "all-to-all", "collective-permute", "reduce-scatter")
+    )
+
+
+def test_roofline_report_dominance():
+    rep = roofline_report(
+        flops_per_chip=197e12, bytes_per_chip=819e9 * 2, collective_bytes_per_chip=0.0,
+        model_flops=197e12 * 256, chips=256,
+    )
+    assert rep["dominant"] == "memory"
+    assert rep["t_compute_s"] == pytest.approx(1.0)
+    assert rep["t_memory_s"] == pytest.approx(2.0)
+    assert rep["step_lower_bound_s"] == pytest.approx(2.0)
+    assert rep["useful_flops_ratio"] == pytest.approx(1.0)

@@ -1,0 +1,204 @@
+"""Substrate: optimizers, schedules, checkpointing, metrics, trees, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.data import (
+    dirichlet_partition,
+    make_dataset,
+    make_federated_lm_data,
+    split_train_test_val,
+    token_batches,
+)
+from repro.data.federated import DeviceData
+from repro.optim import adamw, apply_updates, chain, clip_by_global_norm, cosine_decay, linear_warmup_cosine, sgd
+from repro.utils import roc_auc, tree_global_norm, tree_size_bytes, tree_stack, tree_unstack
+from repro.utils.metrics import accuracy
+
+
+# ---------------- optimizers ----------------
+
+def _rosenbrockish(params):
+    return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum(params["b"] ** 2)
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adamw", "chained"])
+def test_optimizers_minimize_quadratic(opt_name):
+    opt = {
+        "sgd": sgd(0.1, momentum=0.9),
+        "adamw": adamw(0.3),
+        "chained": chain(clip_by_global_norm(10.0), adamw(0.3)),
+    }[opt_name]
+    params = {"w": jnp.zeros(4), "b": jnp.ones(3)}
+    state = opt.init(params)
+    grad_fn = jax.grad(_rosenbrockish)
+    for _ in range(200):
+        g = grad_fn(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(_rosenbrockish(params)) < 1e-2
+
+
+def test_clip_by_global_norm_bounds():
+    opt = clip_by_global_norm(1.0)
+    g = {"a": jnp.full(100, 10.0)}
+    upd, _ = opt.update(g, {}, None)
+    assert float(tree_global_norm(upd)) <= 1.0 + 1e-5
+
+
+def test_schedules_shapes():
+    s = linear_warmup_cosine(1.0, 10, 110)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert float(s(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-6)
+    assert float(s(jnp.asarray(110))) == pytest.approx(0.0, abs=1e-6)
+    c = cosine_decay(2.0, 100, floor=0.5)
+    assert float(c(jnp.asarray(0))) == pytest.approx(2.0)
+    assert float(c(jnp.asarray(1000))) == pytest.approx(0.5)
+
+
+def test_adamw_weight_decay_shrinks_params():
+    opt = adamw(1e-2, weight_decay=0.5)
+    params = {"w": jnp.full(3, 10.0)}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros(3)}
+    upd, state = opt.update(zero_g, state, params)
+    params2 = apply_updates(params, upd)
+    assert float(params2["w"][0]) < 10.0
+
+
+# ---------------- checkpointing ----------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "layer": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.zeros(3)},
+        "stack": [jnp.ones((2, 2)), jnp.full((1,), 7, jnp.int32)],
+    }
+    save_checkpoint(str(tmp_path / "ck"), tree, step=5)
+    got = restore_checkpoint(str(tmp_path / "ck"), tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=2)
+    tree = {"w": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"w": jnp.full(2, float(s))})
+    assert mgr.all_steps() == [3, 4]
+    got, step = mgr.restore_latest(tree)
+    assert step == 4 and float(got["w"][0]) == 4.0
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path / "ck"), {"w": jnp.zeros(3)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(str(tmp_path / "ck"), {"w": jnp.zeros(4)})
+
+
+# ---------------- metrics (hypothesis: AUC == naive pairwise) ----------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    labels=st.lists(st.sampled_from([0, 1]), min_size=2, max_size=60),
+    seed=st.integers(0, 1000),
+    ties=st.booleans(),
+)
+def test_auc_matches_naive_pairwise(labels, seed, ties):
+    rng = np.random.default_rng(seed)
+    labels = np.array(labels, np.float64)
+    scores = rng.normal(0, 1, len(labels))
+    if ties:
+        scores = np.round(scores)  # induce ties
+    got = roc_auc(labels, scores)
+    pos = scores[labels == 1]
+    neg = scores[labels == 0]
+    if len(pos) == 0 or len(neg) == 0:
+        assert got == 0.5
+        return
+    wins = (pos[:, None] > neg[None, :]).sum() + 0.5 * (pos[:, None] == neg[None, :]).sum()
+    naive = wins / (len(pos) * len(neg))
+    assert got == pytest.approx(naive, abs=1e-9)
+
+
+def test_auc_label_conventions():
+    s = np.array([0.9, 0.1, 0.8, 0.2])
+    assert roc_auc(np.array([1, -1, 1, -1]), s) == roc_auc(np.array([1, 0, 1, 0]), s) == 1.0
+    assert accuracy(np.array([1, -1]), np.array([3.0, -2.0])) == 1.0
+
+
+# ---------------- trees ----------------
+
+def test_tree_stack_unstack_roundtrip():
+    trees = [{"a": jnp.full(2, i), "b": (jnp.zeros(1) + i,)} for i in range(3)]
+    stacked = tree_stack(trees)
+    assert stacked["a"].shape == (3, 2)
+    back = tree_unstack(stacked)
+    for t, b in zip(trees, back):
+        np.testing.assert_allclose(np.asarray(t["a"]), np.asarray(b["a"]))
+
+
+def test_tree_size_bytes():
+    t = {"w": jnp.zeros((4, 4), jnp.float32), "b": jnp.zeros(2, jnp.bfloat16)}
+    assert tree_size_bytes(t) == 4 * 4 * 4 + 2 * 2
+
+
+# ---------------- data ----------------
+
+def test_dataset_stats_match_paper_table1():
+    """Device counts and per-device ranges per the paper's Table 1."""
+    gleam = make_dataset("gleam")
+    assert gleam.n_devices == 38
+    assert all(33 <= d.n <= 99 for d in gleam.devices)
+    em = make_dataset("emnist", scale=0.05)
+    assert em.n_devices == int(3462 * 0.05)
+    assert all(10 <= d.n <= 460 for d in em.devices)
+    s = make_dataset("sent140", scale=0.02)
+    assert s.n_devices == int(4000 * 0.02)
+    assert all(21 <= d.n <= 345 for d in s.devices)
+    assert (s.devices[0].x >= 0).all()  # bag-of-words nonneg
+
+
+def test_split_fractions():
+    dev = DeviceData(x=np.zeros((100, 3), np.float32), y=np.ones(100, np.float32))
+    sp = split_train_test_val(dev, seed=1)
+    assert sp["train"].n == 50 and sp["test"].n == 40 and sp["val"].n == 10
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_devices=st.integers(2, 12), alpha=st.floats(0.05, 5.0), seed=st.integers(0, 50))
+def test_dirichlet_partition_conserves_samples(n_devices, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(200, 3)).astype(np.float32)
+    y = rng.integers(0, 3, 200).astype(np.float32)
+    parts = dirichlet_partition(x, y, n_devices, alpha=alpha, seed=seed)
+    assert len(parts) == n_devices
+    assert all(p.n >= 1 for p in parts)
+    # sample conservation (up to the non-empty-device fill-in duplicates)
+    total = sum(p.n for p in parts)
+    assert abs(total - 200) <= n_devices
+
+
+def test_lm_data_noniid_and_deterministic():
+    a1 = make_federated_lm_data(3, 50, 500, seed=4)
+    a2 = make_federated_lm_data(3, 50, 500, seed=4)
+    for x, y in zip(a1, a2):
+        np.testing.assert_array_equal(x, y)
+    # distinct clients have distinct unigram histograms
+    h0 = np.bincount(a1[0], minlength=50)
+    h1 = np.bincount(a1[1], minlength=50)
+    assert np.abs(h0 - h1).sum() > 50
+
+
+def test_token_batches_windows():
+    toks = np.arange(1000, dtype=np.int32)
+    it = token_batches(toks, batch=4, seq_len=16, seed=0)
+    w = next(it)
+    assert w.shape == (4, 17)
+    # windows are contiguous slices
+    for row in w:
+        np.testing.assert_array_equal(np.diff(row), 1)
