@@ -2,8 +2,19 @@
 minutes on one CPU while preserving the paper's device-count regimes."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable
+
+
+def assert_not_interpret() -> None:
+    """Refuse to record timings under the Pallas interpreter (the
+    test-only REPRO_PALLAS_INTERPRET=1 dispatch; see repro.serve docs)."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        raise SystemExit(
+            "REPRO_PALLAS_INTERPRET=1 is set: benchmarks would time the "
+            "Pallas interpreter, not a serving configuration. Unset it."
+        )
 
 # per-dataset scale factors for CPU benchmarks (paper runs full scale)
 SCALES = {"gleam": 1.0, "emnist": 0.02, "sent140": 0.02}

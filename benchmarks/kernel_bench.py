@@ -24,6 +24,19 @@ def run():
         flops = 2 * m * n * d
         rows.append(csv_row(f"kernel.rbf_gram.{m}x{n}x{d}", f"{us:.1f}",
                             f"us_per_call; {flops / us / 1e3:.2f} GFLOP/s (jnp ref)"))
+    # fused ensemble scoring: the serve-path hot spot (mean over k members)
+    for (b, k, n, d) in [(1024, 8, 200, 32), (1024, 32, 200, 32)]:
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (b, d))
+        sup = jax.random.normal(ks[1], (k, n, d))
+        coef = jax.random.normal(ks[2], (k, n))
+        gammas = jax.random.uniform(ks[3], (k,), minval=0.1, maxval=1.0)
+        f = jax.jit(ref.ensemble_score_ref)
+        f(x, sup, coef, gammas).block_until_ready()
+        us = timeit_us(lambda: f(x, sup, coef, gammas).block_until_ready())
+        flops = 2 * k * b * n * d
+        rows.append(csv_row(f"kernel.ensemble_score.b{b}k{k}n{n}d{d}", f"{us:.1f}",
+                            f"us_per_call; {flops / us / 1e3:.2f} GFLOP/s (jnp ref)"))
     # flash attention reference
     for (B, S, H, K, hd) in [(1, 512, 8, 2, 64), (2, 1024, 8, 8, 64)]:
         ks = jax.random.split(key, 3)

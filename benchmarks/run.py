@@ -1,6 +1,13 @@
 """Benchmark orchestrator — one module per paper table/figure, plus the
-communication-cost and kernel micro-benchmarks. Prints
-``name,value,derived`` CSV (one row per measured quantity)."""
+communication-cost, kernel, and serve-path micro-benchmarks. Prints
+``name,value,derived`` CSV (one row per measured quantity).
+
+Benchmarks time whatever the kernel dispatch policy selects for this
+backend — the compiled Pallas kernels on TPU, the jit'd jnp oracles on
+CPU. The policy (including the ``REPRO_PALLAS_INTERPRET=1`` test-only
+override, which would invalidate any timing) is documented once in the
+``repro.serve`` package docstring; do not run benchmarks with that
+flag set."""
 from __future__ import annotations
 
 import sys
@@ -8,6 +15,9 @@ import time
 
 
 def main() -> None:
+    from benchmarks.common import assert_not_interpret
+
+    assert_not_interpret()
     from benchmarks import (
         ablation_distill_loss,
         comm_cost,
@@ -16,6 +26,7 @@ def main() -> None:
         fig3_distill_proxy,
         futurework_bench,
         kernel_bench,
+        serve_bench,
         table1_datasets,
     )
 
@@ -26,6 +37,7 @@ def main() -> None:
         ("fig3", fig3_distill_proxy.run),
         ("comm", comm_cost.run),
         ("kernels", kernel_bench.run),
+        ("serve", serve_bench.run),
         ("ablation", ablation_distill_loss.run),
         ("futurework", futurework_bench.run),
     ]

@@ -1,0 +1,102 @@
+"""Serve-path benchmark: fused ensemble_score vs. the pre-fusion
+padded-gram path, plus micro-batching scheduler throughput.
+
+Three comparisons per ensemble size k:
+  * ``serve.fused`` vs ``serve.padded`` — steady-state wall-clock of
+    ``Ensemble.predict`` (pack once + fused kernel, chunked) against
+    the legacy ``Ensemble.predict_padded`` (re-pack per call + full
+    (k, batch, n_max) gram). The derived column is the speedup; the
+    acceptance bar is fused beating padded for k >= 8.
+  * ``serve.sched_batched`` vs ``serve.sched_single`` — scheduler
+    throughput with full micro-batches vs. one-request batches
+    (batching win at the request layer).
+  * ``serve.sched_cached`` — repeat-traffic throughput with the
+    scored-query LRU enabled (cache win).
+
+Kernel dispatch policy (TPU Pallas vs. CPU oracle) is documented in
+the ``repro.serve`` package docstring.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Ensemble
+from repro.core.svm import SVMModel
+from repro.serve import EnsembleScorer, ServeConfig
+
+from benchmarks.common import assert_not_interpret, csv_row, timeit_us
+
+
+def _make_ensemble(k: int, n: int = 200, d: int = 32, seed: int = 0) -> Ensemble:
+    rng = np.random.default_rng(seed)
+    members = []
+    for i in range(k):
+        ni = int(rng.integers(n // 2, n + 1))  # ragged support counts
+        members.append(
+            SVMModel(
+                support_x=rng.normal(0, 1, (ni, d)).astype(np.float32),
+                coef=rng.normal(0, 0.1, ni).astype(np.float32),
+                gamma=float(rng.uniform(0.05, 0.5)),
+            )
+        )
+    return Ensemble(members)
+
+
+def run():
+    assert_not_interpret()
+    rows = []
+    rng = np.random.default_rng(1)
+    batch = 2048
+    d = 32
+    x = rng.normal(0, 1, (batch, d)).astype(np.float32)
+
+    for k in (8, 32):
+        ens = _make_ensemble(k, d=d)
+        us_padded = timeit_us(lambda: ens.predict_padded(x), repeats=3, warmup=1)
+        us_fused = timeit_us(lambda: ens.predict(x), repeats=3, warmup=1)
+        speedup = us_padded / max(us_fused, 1e-9)
+        rows.append(csv_row(f"serve.padded.k{k}", f"{us_padded:.0f}",
+                            f"us_per_call; batch={batch}"))
+        rows.append(csv_row(f"serve.fused.k{k}", f"{us_fused:.0f}",
+                            f"us_per_call; {speedup:.2f}x vs padded"))
+
+    # request-level scheduler: micro-batched vs one-request batches
+    k = 16
+    scorer = EnsembleScorer(_make_ensemble(k, d=d))
+    queries = [rng.normal(0, 1, (d,)).astype(np.float32) for _ in range(256)]
+
+    def throughput(config, reqs):
+        sched = scorer.scheduler(config)
+        sched.run(reqs)  # warmup (jit compile per bucket)
+        sched = scorer.scheduler(config)
+        t0 = time.perf_counter()
+        sched.run(reqs)
+        dt = time.perf_counter() - t0
+        return len(reqs) / dt, sched.stats
+
+    big = ServeConfig(max_batch=256, buckets=(256,), cache_size=0)
+    one = ServeConfig(max_batch=1, buckets=(1,), cache_size=0)
+    rps_big, _ = throughput(big, queries)
+    rps_one, _ = throughput(one, queries)
+    rows.append(csv_row(f"serve.sched_batched.k{k}", f"{rps_big:.0f}",
+                        f"req_per_s; batch=256; {rps_big / max(rps_one, 1e-9):.1f}x vs single"))
+    rows.append(csv_row(f"serve.sched_single.k{k}", f"{rps_one:.0f}", "req_per_s; batch=1"))
+
+    # repeat traffic with the scored-query LRU
+    cached = ServeConfig(max_batch=256, buckets=(256,), cache_size=512)
+    sched = scorer.scheduler(cached)
+    sched.run(queries)  # populate the cache
+    hits_before = sched.stats.answered_from_cache
+    t0 = time.perf_counter()
+    sched.run(queries)
+    dt = time.perf_counter() - t0
+    hit_rate = (sched.stats.answered_from_cache - hits_before) / len(queries)
+    rows.append(csv_row(f"serve.sched_cached.k{k}", f"{len(queries) / dt:.0f}",
+                        f"req_per_s; hit_rate={hit_rate:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

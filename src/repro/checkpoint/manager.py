@@ -15,7 +15,9 @@ import numpy as np
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path landed after the pinned jax; tree_util
+    # has carried it since 0.4.6.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
@@ -42,7 +44,7 @@ def restore_checkpoint(path: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (shapes/dtypes validated)."""
     with np.load(os.path.join(path, "arrays.npz")) as data:
         arrays = {k: data[k] for k in data.files}
-    flat, treedef = jax.tree.flatten_with_path(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for pathkeys, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pathkeys)
@@ -52,7 +54,7 @@ def restore_checkpoint(path: str, like: Any) -> Any:
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
         leaves.append(arr.astype(leaf.dtype))
-    return jax.tree.unflatten(treedef, leaves)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 class CheckpointManager:

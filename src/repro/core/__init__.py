@@ -10,7 +10,7 @@ fedavg.py     iterative FedAvg baseline             [related work [5]]
 deepfed.py    transformer instantiation (assigned architectures)
 """
 from repro.core.svm import SVMModel, ConstantModel, train_svm, default_gamma, validation_auc
-from repro.core.ensemble import Ensemble, ensemble_predict_mean
+from repro.core.ensemble import Ensemble, StackedEnsemble, ensemble_predict_mean
 from repro.core.selection import DeviceReport, cv_selection, data_selection, random_selection, select
 from repro.core.distill import distill_svm, distill_loss_l2, distill_loss_kl, DISTILL_LOSSES
 from repro.core.protocol import run_protocol, ProtocolResult
@@ -20,7 +20,7 @@ from repro.core import deepfed
 
 __all__ = [
     "SVMModel", "ConstantModel", "train_svm", "default_gamma", "validation_auc",
-    "Ensemble", "ensemble_predict_mean",
+    "Ensemble", "StackedEnsemble", "ensemble_predict_mean",
     "DeviceReport", "cv_selection", "data_selection", "random_selection", "select",
     "distill_svm", "distill_loss_l2", "distill_loss_kl", "DISTILL_LOSSES",
     "run_protocol", "ProtocolResult",

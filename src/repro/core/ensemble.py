@@ -1,27 +1,110 @@
 """Ensembles of local models (Section 3): F_k(x) = mean_t f_t(x).
 
 Two representations:
-  * ``Ensemble`` — heterogeneous member list (SVMs, constants); member
-    predictions are padded+stacked so evaluation is one batched einsum
-    (vmap over the member axis — shardable over the mesh 'data' axis).
-  * ``StackedEnsemble`` (deepfed) — homogeneous pytree params stacked on
-    a leading member axis, evaluated with jax.vmap.
+  * ``Ensemble`` — heterogeneous member list (SVMs, constants). SVM-only
+    ensembles are packed once into a ``StackedEnsemble`` and scored with
+    the fused ``ensemble_score`` kernel; mixed ensembles fall back to
+    the per-member mean.
+  * ``StackedEnsemble`` — homogeneous padded arrays stacked on a leading
+    member axis: supports (k, n_max, d), dual coefs (k, n_max), gammas
+    (k,). This is the serve-path representation: one jit'd fused call
+    per query chunk (``repro.kernels.ops.ensemble_score``), no
+    (k, batch, n_max) Gram tensor in HBM, shardable over the mesh
+    'data' axis on the member dim.
+
+``Ensemble.predict_padded`` keeps the pre-fusion path (pack per call +
+vmap'd padded Gram) as the benchmark baseline for
+``benchmarks/serve_bench.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.svm import SVMModel, ConstantModel, rbf_gram
+from repro.core.svm import SVMModel
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedEnsemble:
+    """Packed homogeneous ensemble: the fused serving representation."""
+
+    sup: jnp.ndarray     # (k, n_max, d) zero-padded support vectors
+    coef: jnp.ndarray    # (k, n_max) zero-padded dual coefficients
+    gammas: jnp.ndarray  # (k,) per-member RBF bandwidths
+
+    @property
+    def k(self) -> int:
+        return self.sup.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.sup.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.sup.shape[2]
+
+    @classmethod
+    def from_members(cls, members: Sequence[SVMModel]) -> "StackedEnsemble":
+        if not members:
+            raise ValueError("empty ensemble")
+        for m in members:
+            if not isinstance(m, SVMModel):
+                raise TypeError(
+                    f"StackedEnsemble requires SVMModel members, got {type(m).__name__}; "
+                    "use ensemble_predict_mean for mixed ensembles"
+                )
+        n_max = max(len(m.coef) for m in members)
+        d = members[0].support_x.shape[1]
+        k = len(members)
+        sup = np.zeros((k, n_max, d), np.float32)
+        coef = np.zeros((k, n_max), np.float32)
+        gammas = np.zeros((k,), np.float32)
+        for i, m in enumerate(members):
+            n = len(m.coef)
+            sup[i, :n] = m.support_x
+            coef[i, :n] = m.coef
+            gammas[i] = m.gamma
+        return cls(jnp.asarray(sup), jnp.asarray(coef), jnp.asarray(gammas))
+
+    def score(self, x) -> jnp.ndarray:
+        """Fused mean member score for one query block. x: (b, d) -> (b,)."""
+        from repro.kernels import ops as kops
+
+        return kops.ensemble_score(jnp.asarray(x, jnp.float32), self.sup, self.coef, self.gammas)
+
+    def predict(self, x: np.ndarray, chunk: int = 4096) -> np.ndarray:
+        """Chunked/streaming evaluation over a host array of queries.
+
+        Each chunk is zero-padded up to a power-of-two bucket before the
+        jit'd scoring call, so ragged workloads (e.g. per-device test
+        splits of hundreds of distinct sizes) compile O(log chunk)
+        shapes instead of one per distinct batch size.
+        """
+        if len(x) == 0:
+            return np.zeros(0, np.float32)
+        x = np.asarray(x, np.float32)
+        outs = []
+        for start in range(0, len(x), chunk):
+            xq = x[start : start + chunk]
+            b = len(xq)
+            bp = max(8, 1 << (b - 1).bit_length())  # next power of two
+            if bp != b:
+                xq = np.pad(xq, ((0, bp - b), (0, 0)))
+            outs.append(np.asarray(self.score(xq))[:b])
+        return np.concatenate(outs)
 
 
 @dataclasses.dataclass
 class Ensemble:
     members: List[SVMModel]
+    _stacked: Optional[StackedEnsemble] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
 
     @property
     def k(self) -> int:
@@ -31,24 +114,35 @@ class Ensemble:
     def nbytes(self) -> int:
         return sum(m.nbytes for m in self.members)
 
+    def stacked(self) -> StackedEnsemble:
+        """Pack once, reuse for every subsequent predict/score call.
+
+        Members are treated as immutable after construction (they are
+        trained models); mutate ``members`` -> build a new Ensemble.
+        """
+        if self._stacked is None:
+            self._stacked = StackedEnsemble.from_members(self.members)
+        return self._stacked
+
     def predict(self, x: np.ndarray, chunk: int = 4096) -> np.ndarray:
-        """Mean of member decision scores; batched over padded supports."""
+        """Mean of member decision scores via the fused serve path."""
         if not self.members:
             raise ValueError("empty ensemble")
-        n_max = max(len(m.coef) for m in self.members)
-        d = self.members[0].support_x.shape[1]
-        k = self.k
-        sup = np.zeros((k, n_max, d), np.float32)
-        coef = np.zeros((k, n_max), np.float32)
-        gammas = np.zeros((k,), np.float32)
-        for i, m in enumerate(self.members):
-            n = len(m.coef)
-            sup[i, :n] = m.support_x
-            coef[i, :n] = m.coef
-            gammas[i] = m.gamma
-        sup_j = jnp.asarray(sup)
-        coef_j = jnp.asarray(coef)
-        gam_j = jnp.asarray(gammas)
+        if any(not isinstance(m, SVMModel) for m in self.members):
+            # heterogeneous (e.g. ConstantModel baselines): per-member mean
+            return ensemble_predict_mean(self.members, x)
+        return self.stacked().predict(x, chunk=chunk)
+
+    def predict_padded(self, x: np.ndarray, chunk: int = 4096) -> np.ndarray:
+        """Pre-fusion baseline: pack per call, vmap a full padded Gram.
+
+        Kept (not routed anywhere) as the comparison point for
+        ``benchmarks/serve_bench.py``: it re-packs the (k, n_max, d)
+        support tensor on every call and materializes the whole
+        (k, chunk, n_max) Gram before reducing it.
+        """
+        packed = StackedEnsemble.from_members(self.members)  # per call, on purpose
+        sup_j, coef_j, gam_j = packed.sup, packed.coef, packed.gammas
 
         def member_scores(s, c, g, xq):
             # zero-padded support rows contribute exp(-g*dist)*0 via coef

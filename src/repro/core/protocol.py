@@ -12,10 +12,15 @@ Simulates the full round on a federated dataset:
 
 Communication accounting counts protocol bytes (uploaded model sizes,
 downloaded global model) — the quantity the paper optimizes.
+
+Ensemble evaluation streams the concatenated test sets through the
+fused ``ensemble_score`` serve path in ``eval_chunk``-sized blocks
+(each Ensemble is packed once and reused across every chunk).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -93,6 +98,7 @@ def run_protocol(
     ideal_cap: int = 2000,
     random_trials: int = 5,
     distill_proxy: int = 0,
+    eval_chunk: int = 8192,
 ) -> ProtocolResult:
     m = dataset.n_devices
     log.info("training %d local models (%s)", m, dataset.name)
@@ -133,7 +139,7 @@ def run_protocol(
                     if not ids:
                         continue
                     ens = Ensemble([by_id[i].model for i in ids])
-                    auc, _ = _mean_auc_over_devices(devices, ens.predict)
+                    auc, _ = _mean_auc_over_devices(devices, partial(ens.predict, chunk=eval_chunk))
                     trials.append(auc)
                 if trials:
                     ensemble_auc[strat][k] = float(np.mean(trials))
@@ -143,7 +149,7 @@ def run_protocol(
                 if not ids:
                     continue
                 ens = Ensemble([by_id[i].model for i in ids])
-                auc, _ = _mean_auc_over_devices(devices, ens.predict)
+                auc, _ = _mean_auc_over_devices(devices, partial(ens.predict, chunk=eval_chunk))
                 ensemble_auc[strat][k] = auc
             comm[f"upload_{strat}_k{k}"] = float(sum(svm_bytes[i] for i in ids))
         log.info("%s/%s: %s", dataset.name, strat, ensemble_auc[strat])
@@ -151,7 +157,7 @@ def run_protocol(
     # --- full ensemble of all eligible devices ---
     eligible_ids = [r.device_id for r in reports if r.eligible]
     full_ens = Ensemble([by_id[i].model for i in eligible_ids])
-    full_auc, full_aucs = _mean_auc_over_devices(devices, full_ens.predict)
+    full_auc, full_aucs = _mean_auc_over_devices(devices, partial(full_ens.predict, chunk=eval_chunk))
     comm["upload_full"] = float(sum(svm_bytes[i] for i in eligible_ids))
 
     best = {s: max(v.values()) for s, v in ensemble_auc.items() if v}

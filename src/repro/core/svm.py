@@ -70,9 +70,16 @@ class SVMModel:
     coef: np.ndarray  # (n,)  = alpha * y / (lam * n)
     gamma: float
 
-    def predict(self, x: np.ndarray) -> np.ndarray:
-        K = rbf_gram(jnp.asarray(x, jnp.float32), jnp.asarray(self.support_x, jnp.float32), self.gamma)
-        return np.asarray(K @ jnp.asarray(self.coef, jnp.float32))
+    def predict(self, x: np.ndarray, chunk: int = 8192) -> np.ndarray:
+        """Decision scores via the fused k=1 ensemble_score kernel.
+
+        Packs transiently through the canonical packer — protocol models
+        predict only a handful of times each, so retaining device copies
+        per model would outweigh the repack cost. Hot serving paths hold
+        a long-lived ``StackedEnsemble``/``EnsembleScorer`` instead."""
+        from repro.core.ensemble import StackedEnsemble
+
+        return StackedEnsemble.from_members([self]).predict(x, chunk=chunk)
 
     @property
     def nbytes(self) -> int:

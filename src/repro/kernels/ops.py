@@ -1,9 +1,10 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-Dispatch policy: on TPU backends call the Pallas kernels compiled;
-elsewhere (this CPU container) call the pure-jnp oracle, unless
-``REPRO_PALLAS_INTERPRET=1`` forces the kernels through interpret mode
-(used by the test suite to validate kernel bodies on CPU).
+Dispatch policy (canonically documented in ``repro/serve/__init__.py``):
+on TPU backends call the Pallas kernels compiled; elsewhere (this CPU
+container) call the pure-jnp oracle, unless ``REPRO_PALLAS_INTERPRET=1``
+forces the kernels through interpret mode (used by the test suite to
+validate kernel bodies on CPU).
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.rbf_gram import rbf_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ensemble_score import ensemble_score_pallas
 
 
 def _on_tpu() -> bool:
@@ -61,3 +63,27 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
     if _force_interpret():
         return flash_attention_pallas(q, k, v, causal=causal, window=window, interpret=True)
     return _flash_ref(q, k, v, causal, window)
+
+
+@jax.jit
+def _ens_tpu(x, sup, coef, gammas):
+    return ensemble_score_pallas(x, sup, coef, gammas)
+
+
+@jax.jit
+def _ens_ref(x, sup, coef, gammas):
+    return ref.ensemble_score_ref(x, sup, coef, gammas)
+
+
+def ensemble_score(x, sup, coef, gammas):
+    """Fused mean-of-member RBF-SVM scoring (the repro.serve hot path).
+
+    x: (b, d); sup: (k, n_max, d); coef: (k, n_max); gammas: (k,).
+    Returns (b,) fp32. The Pallas path never materializes the
+    (k, b, n_max) Gram tensor in HBM.
+    """
+    if _on_tpu():
+        return _ens_tpu(x, sup, coef, gammas)
+    if _force_interpret():
+        return ensemble_score_pallas(x, sup, coef, gammas, interpret=True)
+    return _ens_ref(x, sup, coef, gammas)

@@ -18,6 +18,24 @@ def rbf_gram_ref(x1, x2, gamma: float):
     return jnp.exp(-gamma * d2)
 
 
+def ensemble_score_ref(x, sup, coef, gammas):
+    """Mean of member RBF-SVM decision scores (oracle for ensemble_score).
+
+    x: (b, d); sup: (k, n_max, d); coef: (k, n_max); gammas: (k,).
+    Returns (b,). Zero-padded support rows contribute nothing because
+    their coefficients are zero.
+    """
+    x = x.astype(jnp.float32)
+
+    def member_scores(s, c, g):
+        return rbf_gram_ref(x, s, g) @ c
+
+    scores = jax.vmap(member_scores)(
+        sup.astype(jnp.float32), coef.astype(jnp.float32), gammas.astype(jnp.float32)
+    )  # (k, b)
+    return jnp.mean(scores, axis=0)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """Dense GQA attention oracle.
 

@@ -1,0 +1,51 @@
+"""Scored-query LRU cache for the serve path.
+
+Requests that repeat an already-scored query (byte-identical feature
+row) are answered from the cache and never enter a batch, so cache
+hits cost neither padding slots nor kernel time. Keys are the raw row
+bytes plus dtype/shape, making collisions impossible rather than
+improbable. See ``repro.serve`` package docstring for where this sits
+in the serving pipeline.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable, Optional
+
+import numpy as np
+
+
+def query_key(row: np.ndarray) -> Hashable:
+    """Exact cache key for one query row."""
+    a = np.ascontiguousarray(row)
+    return (a.dtype.str, a.shape, a.tobytes())
+
+
+class LRUCache:
+    """Bounded least-recently-used map. ``capacity <= 0`` disables it
+    (every get misses, puts are dropped) so callers need no branching."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._d: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        if self.capacity <= 0 or key not in self._d:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return self._d[key]
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)

@@ -1,0 +1,41 @@
+"""EnsembleScorer — the SVM-ensemble scoring service.
+
+Bridges the data plane (packed ``StackedEnsemble`` + fused
+``ensemble_score`` kernel, see ``repro.core.ensemble``) to the control
+plane (``MicroBatchScheduler``): packing happens ONCE at construction,
+and each scheduler batch costs exactly one fused kernel call at a
+bucket shape. Dispatch policy per backend is documented in the
+``repro.serve`` package docstring.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import numpy as np
+
+from repro.core.ensemble import Ensemble, StackedEnsemble
+from repro.serve.scheduler import MicroBatchScheduler, ServeConfig
+
+
+class EnsembleScorer:
+    """score_fn adapter over a packed ensemble.
+
+    Accepts an ``Ensemble`` (packed here, once) or an already-packed
+    ``StackedEnsemble``. Instances are callable with a (b, d) batch and
+    return (b,) fp32 mean member scores, which is exactly the
+    ``MicroBatchScheduler`` score_fn contract.
+    """
+
+    def __init__(self, ensemble: Union[Ensemble, StackedEnsemble]):
+        self.stacked = ensemble.stacked() if isinstance(ensemble, Ensemble) else ensemble
+
+    @property
+    def k(self) -> int:
+        return self.stacked.k
+
+    def __call__(self, batch: np.ndarray) -> np.ndarray:
+        return np.asarray(self.stacked.score(batch))
+
+    def scheduler(self, config: ServeConfig = ServeConfig()) -> MicroBatchScheduler:
+        """A micro-batching scheduler serving this ensemble."""
+        return MicroBatchScheduler(self, config)

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.ensemble_score import ensemble_score_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rbf_gram import rbf_gram_pallas
 
@@ -39,6 +40,41 @@ def test_rbf_gram_properties(key):
     # diagonal ~1 up to catastrophic-cancellation noise in ||x||^2+||y||^2-2xy
     np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-4)
     assert (K >= 0).all() and (K <= 1 + 1e-4).all()
+
+
+@pytest.mark.parametrize(
+    "b,k,n_max,d", [(7, 1, 5, 3), (64, 8, 100, 16), (130, 5, 33, 4), (1, 12, 200, 64), (33, 3, 130, 8)]
+)
+def test_ensemble_score_sweep(key, b, k, n_max, d):
+    """Fused serve kernel vs oracle, with ragged zero-padded supports."""
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, d))
+    sup = jax.random.normal(ks[1], (k, n_max, d))
+    coef = jax.random.normal(ks[2], (k, n_max))
+    gammas = jax.random.uniform(ks[3], (k,), minval=0.1, maxval=2.0)
+    # ragged members: zero out per-member tails as the packer does
+    lengths = np.random.default_rng(0).integers(1, n_max + 1, size=k)
+    mask = np.arange(n_max)[None, :] < lengths[:, None]
+    sup = sup * mask[:, :, None]
+    coef = coef * mask
+    out = ensemble_score_pallas(x, sup, coef, gammas, block_b=64, block_n=64, interpret=True)
+    want = ref.ensemble_score_ref(x, sup, coef, gammas)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+    assert out.shape == (b,)
+
+
+def test_ensemble_score_matches_explicit_mean(key):
+    """Fused result == mean over per-member padded-gram scores."""
+    b, k, n_max, d = 40, 6, 50, 8
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, d))
+    sup = jax.random.normal(ks[1], (k, n_max, d))
+    coef = jax.random.normal(ks[2], (k, n_max))
+    gammas = jax.random.uniform(ks[3], (k,), minval=0.2, maxval=1.0)
+    out = ensemble_score_pallas(x, sup, coef, gammas, interpret=True)
+    member = [ref.rbf_gram_ref(x, sup[t], float(gammas[t])) @ coef[t] for t in range(k)]
+    want = jnp.stack(member).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
 
 
 @pytest.mark.parametrize(

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable, supports_long_context
 from repro.launch import specs as S

@@ -1,0 +1,308 @@
+"""repro.serve: scheduler batching invariants, LRU cache, EnsembleScorer."""
+import numpy as np
+import pytest
+
+from repro.core import Ensemble, ensemble_predict_mean, train_svm
+from repro.serve import (
+    EnsembleScorer,
+    LRUCache,
+    MicroBatchScheduler,
+    QueueFullError,
+    ServeConfig,
+    query_key,
+)
+
+
+def _blob_data(rg, n=60, d=4, sep=2.0):
+    y = np.where(rg.random(n) < 0.5, 1.0, -1.0)
+    x = rg.normal(0, 1, (n, d)).astype(np.float32) + sep * y[:, None] / np.sqrt(d)
+    return x.astype(np.float32), y.astype(np.float32)
+
+
+def _echo_score(batch):
+    """score_fn stub: row sum, so every response is attributable."""
+    return batch.sum(axis=tuple(range(1, batch.ndim)))
+
+
+# ----------------------------------------------------------------------
+# scheduler invariants
+# ----------------------------------------------------------------------
+
+def test_responses_in_submission_order(rng):
+    sched = MicroBatchScheduler(_echo_score, ServeConfig(max_batch=4, buckets=(4,)))
+    rows = [rng.normal(0, 1, (3,)).astype(np.float32) for _ in range(11)]
+    out = sched.run(rows)
+    np.testing.assert_allclose(out, [r.sum() for r in rows], rtol=1e-6)
+    assert sched.stats.batches == 3  # 4 + 4 + 3 across two full and one partial
+
+
+def test_bucket_padding_correctness():
+    seen = []
+
+    def spy(batch):
+        seen.append(batch.shape[0])
+        return _echo_score(batch)
+
+    cfg = ServeConfig(max_batch=8, buckets=(2, 8))
+    sched = MicroBatchScheduler(spy, cfg)
+    rows = [np.full((2,), float(i), np.float32) for i in range(5)]
+    out = sched.run(rows)
+    assert seen == [8]  # 5 rows -> smallest covering bucket
+    assert sched.stats.padded_rows == 3
+    np.testing.assert_allclose(out, [2.0 * i for i in range(5)])
+    # exactly-bucket batch pads nothing
+    sched2 = MicroBatchScheduler(spy, cfg)
+    sched2.run(rows[:2])
+    assert seen[-1] == 2 and sched2.stats.padded_rows == 0
+
+
+def test_bucket_for_picks_smallest_cover():
+    cfg = ServeConfig(max_batch=100, buckets=(128, 8, 32))
+    assert cfg.bucket_for(1) == 8
+    assert cfg.bucket_for(8) == 8
+    assert cfg.bucket_for(9) == 32
+    assert cfg.bucket_for(100) == 128
+    with pytest.raises(ValueError, match="exceeds largest bucket"):
+        cfg.bucket_for(129)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="cover max_batch"):
+        ServeConfig(max_batch=64, buckets=(8, 32))
+    with pytest.raises(ValueError, match="must be >= 1"):
+        ServeConfig(max_batch=0)
+    with pytest.raises(ValueError, match="max_uncollected"):
+        ServeConfig(max_queue=100, max_uncollected=50)
+
+
+def test_score_fn_failure_requeues_batch():
+    """A transient score_fn error must not strand in-flight requests."""
+    state = {"fail": True}
+
+    def flaky(batch):
+        if state["fail"]:
+            state["fail"] = False
+            raise RuntimeError("transient device error")
+        return _echo_score(batch)
+
+    sched = MicroBatchScheduler(
+        flaky, ServeConfig(max_batch=4, buckets=(4,), cache_size=8)
+    )
+    rows = [np.full(2, float(i), np.float32) for i in range(3)] + [np.full(2, 0.0, np.float32)]
+    tickets = sched.submit_many(rows)  # last row duplicates the first
+    with pytest.raises(RuntimeError, match="transient"):
+        sched.flush()
+    sched.flush()  # retry rescores the requeued batch (and its duplicate)
+    np.testing.assert_allclose(
+        [sched.result(t) for t in tickets], [r.sum() for r in rows]
+    )
+
+
+def test_predict_buckets_chunk_shapes(monkeypatch, rng):
+    """Ragged query sizes are padded to power-of-two buckets before the
+    jit'd call, bounding recompiles."""
+    from repro.kernels import ops as kops
+
+    seen = []
+    real = kops.ensemble_score
+
+    def spy(x, sup, coef, gammas):
+        seen.append(x.shape[0])
+        return real(x, sup, coef, gammas)
+
+    monkeypatch.setattr(kops, "ensemble_score", spy)
+    x, y = _blob_data(np.random.default_rng(0))
+    ens = Ensemble([train_svm(x, y)])
+    for n in (5, 7, 8, 33, 100):
+        assert ens.predict(rng.normal(0, 1, (n, 4)).astype(np.float32)).shape == (n,)
+    assert seen == [8, 8, 8, 64, 128]  # 5 ragged sizes -> 3 compiled shapes
+
+
+def test_submit_many_is_atomic_on_overflow():
+    sched = MicroBatchScheduler(_echo_score, ServeConfig(max_batch=2, max_queue=3, buckets=(2,)))
+    rows = [np.ones(2, np.float32) * i for i in range(4)]
+    with pytest.raises(QueueFullError, match="exceeds remaining"):
+        sched.submit_many(rows)
+    assert sched.stats.submitted == 0  # nothing stranded in the queue
+    assert sched.flush() == 0
+
+
+def test_bounded_queue_rejects_overflow():
+    sched = MicroBatchScheduler(_echo_score, ServeConfig(max_batch=2, max_queue=3, buckets=(2,)))
+    for i in range(3):
+        sched.submit(np.ones(2, np.float32) * i)
+    with pytest.raises(QueueFullError):
+        sched.submit(np.ones(2, np.float32))
+    sched.flush()
+    sched.submit(np.ones(2, np.float32))  # drained queue accepts again
+
+
+def test_run_empty_request_list():
+    sched = MicroBatchScheduler(_echo_score, ServeConfig(max_batch=2, buckets=(2,)))
+    out = sched.run([])
+    assert out.shape == (0,) and sched.stats.batches == 0
+
+
+def test_result_is_private_copy_of_bucket_output():
+    """Vector responses: a ticket's result must not alias the bucket."""
+    sched = MicroBatchScheduler(lambda b: b * 2.0, ServeConfig(max_batch=2, buckets=(2,)))
+    rows = [np.arange(3, dtype=np.float32), np.arange(3, dtype=np.float32) + 1]
+    r0, r1 = sched.run(rows)
+    assert r0.base is None or not np.shares_memory(r0, r1)
+
+
+def test_result_semantics():
+    sched = MicroBatchScheduler(_echo_score, ServeConfig(max_batch=2, buckets=(2,)))
+    t = sched.submit(np.ones(3, np.float32))
+    with pytest.raises(RuntimeError, match="not scored yet"):
+        sched.result(t)
+    sched.flush()
+    assert sched.result(t) == pytest.approx(3.0)
+    with pytest.raises(KeyError):
+        sched.result(t)  # one-shot delivery
+
+
+# ----------------------------------------------------------------------
+# cache
+# ----------------------------------------------------------------------
+
+def test_cache_hit_skips_scoring():
+    calls = []
+
+    def spy(batch):
+        calls.append(batch.shape[0])
+        return _echo_score(batch)
+
+    sched = MicroBatchScheduler(
+        spy, ServeConfig(max_batch=4, buckets=(4,), cache_size=16)
+    )
+    row = np.arange(3, dtype=np.float32)
+    out1 = sched.run([row, row + 1])
+    out2 = sched.run([row, row + 1, row + 2])  # two hits, one miss
+    assert sched.stats.answered_from_cache == 2
+    assert sched.stats.scored_rows == 3  # rows 0,1 then only row 2
+    np.testing.assert_allclose(out2[:2], out1)
+    np.testing.assert_allclose(out2[2], (row + 2).sum())
+    assert len(calls) == 2
+
+
+def test_lru_eviction_order():
+    c = LRUCache(2)
+    ka, kb, kc = (query_key(np.array([v], np.float32)) for v in (1.0, 2.0, 3.0))
+    c.put(ka, "a")
+    c.put(kb, "b")
+    assert c.get(ka) == "a"  # refresh a -> b is now LRU
+    c.put(kc, "c")
+    assert c.get(kb) is None and c.get(ka) == "a" and c.get(kc) == "c"
+    assert len(c) == 2
+
+
+def test_result_mutation_cannot_poison_cache():
+    """Vector responses (the LM-path shape): out[i] is a view into the
+    bucket output, so cached rows must be copies in both directions."""
+    sched = MicroBatchScheduler(
+        lambda batch: batch * 2.0, ServeConfig(max_batch=2, buckets=(2,), cache_size=8)
+    )
+    row = np.arange(3, dtype=np.float32)
+    want = row * 2.0
+    first = sched.run([row])[0]
+    first[:] = -99.0  # caller scribbles on its response view
+    second = sched.run([row])[0]  # served from cache
+    np.testing.assert_allclose(second, want)
+    second[:] = -7.0  # scribble on a cache *hit* too
+    np.testing.assert_allclose(sched.run([row])[0], want)
+    assert sched.stats.answered_from_cache == 2
+
+
+def test_submit_copies_caller_buffer():
+    """A serving loop legally reuses one buffer across submits."""
+    sched = MicroBatchScheduler(_echo_score, ServeConfig(max_batch=4, buckets=(4,)))
+    buf = np.zeros(2, np.float32)
+    tickets = []
+    for i in range(3):
+        buf[:] = float(i + 1)
+        tickets.append(sched.submit(buf))
+    sched.flush()
+    np.testing.assert_allclose([sched.result(t) for t in tickets], [2.0, 4.0, 6.0])
+
+
+def test_intra_flush_duplicates_score_once():
+    calls = []
+
+    def spy(batch):
+        calls.append(batch.shape[0])
+        return batch * 2.0
+
+    sched = MicroBatchScheduler(
+        spy, ServeConfig(max_batch=8, buckets=(8,), cache_size=16)
+    )
+    hot = np.arange(3, dtype=np.float32)
+    out = sched.run([hot, hot + 1, hot, hot, hot + 1])
+    assert sched.stats.scored_rows == 2 and sched.stats.deduped_in_flight == 3
+    assert len(calls) == 1
+    np.testing.assert_allclose(out, np.stack([hot, hot + 1, hot, hot, hot + 1]) * 2.0)
+    # fanned-out results are private copies too
+    out[2][:] = -1.0
+    np.testing.assert_allclose(sched.run([hot])[0], hot * 2.0)
+
+
+def test_abandoned_tickets_are_bounded():
+    cfg = ServeConfig(max_batch=2, max_queue=2, buckets=(2,), max_uncollected=3)
+    sched = MicroBatchScheduler(_echo_score, cfg)
+    tickets = []
+    for i in range(6):  # submit+flush without ever collecting
+        tickets.append(sched.submit(np.full(2, float(i), np.float32)))
+        sched.flush()
+    assert sched.stats.evicted_results == 3
+    assert len(sched._results) == 3
+    with pytest.raises(KeyError):
+        sched.result(tickets[0])  # oldest abandoned ticket evicted
+    assert sched.result(tickets[-1]) == pytest.approx(10.0)  # recent survives
+
+
+def test_cache_disabled_by_default():
+    c = LRUCache(0)
+    k = query_key(np.zeros(2, np.float32))
+    c.put(k, 1.0)
+    assert c.get(k) is None and len(c) == 0
+
+
+# ----------------------------------------------------------------------
+# ensemble service end to end
+# ----------------------------------------------------------------------
+
+def test_ensemble_scorer_rejects_mixed_members():
+    from repro.core import ConstantModel
+
+    x = np.array([[0.0, 1.0], [1.0, 0.0]], np.float32)
+    y = np.array([1.0, -1.0], np.float32)
+    with pytest.raises(TypeError, match="ConstantModel"):
+        EnsembleScorer(Ensemble([ConstantModel(0.5), train_svm(x, y)]))
+
+
+def test_predict_empty_batch(rng):
+    x, y = _blob_data(np.random.default_rng(0))
+    m = train_svm(x, y)
+    empty = np.zeros((0, x.shape[1]), np.float32)
+    assert m.predict(empty).shape == (0,)
+    assert Ensemble([m]).predict(empty).shape == (0,)
+
+
+def test_ensemble_scorer_through_scheduler_matches_oracle(rng):
+    members = []
+    for i in range(6):
+        x, y = _blob_data(np.random.default_rng(i), n=30 + 7 * i)
+        members.append(train_svm(x, y, lam=0.02))
+    scorer = EnsembleScorer(Ensemble(members))
+    assert scorer.k == 6
+    sched = scorer.scheduler(ServeConfig(max_batch=16, buckets=(4, 16), cache_size=64))
+    queries = [rng.normal(0, 1, (4,)).astype(np.float32) for _ in range(23)]
+    got = sched.run(queries)
+    want = ensemble_predict_mean(members, np.stack(queries))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+    # repeat traffic is served from cache without any new scoring call
+    before = sched.stats.batches
+    got2 = sched.run(queries)
+    np.testing.assert_allclose(got2, got, atol=1e-6)
+    assert sched.stats.batches == before
+    assert sched.stats.answered_from_cache == len(queries)
