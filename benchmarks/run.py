@@ -27,6 +27,7 @@ def main() -> None:
         futurework_bench,
         kernel_bench,
         serve_bench,
+        sim_bench,
         table1_datasets,
     )
 
@@ -38,6 +39,7 @@ def main() -> None:
         ("comm", comm_cost.run),
         ("kernels", kernel_bench.run),
         ("serve", serve_bench.run),
+        ("sim", sim_bench.run),
         ("ablation", ablation_distill_loss.run),
         ("futurework", futurework_bench.run),
     ]

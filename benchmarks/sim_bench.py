@@ -1,0 +1,62 @@
+"""Population-simulation benchmark: device-parallel engine vs the
+sequential per-device loop it replaced.
+
+Rows per population size:
+  * ``sim.loop.m<N>``    — sequential oracle wall-clock (one Gram, one
+    SDCA dispatch, one val/test scoring per device);
+  * ``sim.engine.m<N>``  — bucketed engine, cold (includes jit
+    compiles for this run's bucket shapes); derived column is the
+    speedup vs loop — the acceptance bar is >= 5x at 512 devices;
+  * ``sim.engine_warm.m<N>`` — steady-state engine (shapes compiled),
+    the number that matters for scenario sweeps re-running the engine;
+  * ``sim.equiv.m<N>``   — max per-device |val AUC difference| between
+    the two modes (must be ~0: same models, same seeds).
+
+Scenario: ``iid`` with equal-size devices — the friendliest case for
+the LOOP (one jit shape throughout), so the reported speedup is a
+lower bound on heterogeneous populations.
+
+Pass ``smoke`` as argv[1] (CI) to shrink the population.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import assert_not_interpret, csv_row
+
+
+def run(sizes=(128, 512)):
+    assert_not_interpret()
+    from repro.sim import make_federation, train_population
+
+    rows = []
+    for m in sizes:
+        fed = make_federation("iid", n_devices=m, seed=3, mean_samples=72)
+        t0 = time.perf_counter()
+        eng = train_population(fed.dataset, mode="bucketed")
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        train_population(fed.dataset, mode="bucketed")
+        t_warm = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        loop = train_population(fed.dataset, mode="loop")
+        t_loop = time.perf_counter() - t0
+        dauc = max(
+            abs(a.report.val_auc - b.report.val_auc)
+            for a, b in zip(loop.outcomes, eng.outcomes)
+        )
+        rows.append(csv_row(f"sim.loop.m{m}", f"{t_loop:.2f}",
+                            f"s; {m / t_loop:.0f} dev/s"))
+        rows.append(csv_row(f"sim.engine.m{m}", f"{t_cold:.2f}",
+                            f"s; {t_loop / t_cold:.1f}x vs loop (cold)"))
+        rows.append(csv_row(f"sim.engine_warm.m{m}", f"{t_warm:.2f}",
+                            f"s; {t_loop / t_warm:.1f}x vs loop"))
+        rows.append(csv_row(f"sim.equiv.m{m}", f"{dauc:.2e}",
+                            "max |val AUC delta| engine vs loop"))
+    return rows
+
+
+if __name__ == "__main__":
+    smoke = len(sys.argv) > 1 and sys.argv[1] == "smoke"
+    print("\n".join(run(sizes=(48,) if smoke else (128, 512))))

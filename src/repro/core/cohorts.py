@@ -60,7 +60,7 @@ class CohortResult:
 
 
 def run_cohort_protocol(
-    device_states,  # List[protocol.DeviceState] with trained models
+    device_states,  # List[sim.engine.DeviceOutcome] with trained models
     n_cohorts: int,
     probe_x: np.ndarray,
     seed: int = 0,

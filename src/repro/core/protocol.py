@@ -16,6 +16,13 @@ downloaded global model) — the quantity the paper optimizes.
 Ensemble evaluation streams the concatenated test sets through the
 fused ``ensemble_score`` serve path in ``eval_chunk``-sized blocks
 (each Ensemble is packed once and reused across every chunk).
+
+Local training runs on the ``repro.sim`` engine: ``engine="bucketed"``
+(default) fits whole buckets of devices in vectorized batched-Gram +
+vmap'd-SDCA passes; ``engine="loop"`` is the original sequential path,
+kept as the oracle for equivalence tests. Per-device randomness is
+derived via ``derive_device_seed`` in both modes, so results are
+bit-reproducible regardless of device iteration order or batching.
 """
 from __future__ import annotations
 
@@ -25,24 +32,16 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.svm import SVMModel, ConstantModel, train_svm, default_gamma
+from repro.core.svm import train_svm, default_gamma
 from repro.core.ensemble import Ensemble
-from repro.core.selection import DeviceReport, select
+from repro.core.selection import select
 from repro.core.distill import distill_svm
 from repro.data.federated import FederatedDataset, DeviceData
-from repro.data.partition import split_train_test_val, pool_devices
+from repro.data.partition import pool_devices
 from repro.utils.metrics import roc_auc
 from repro.utils.logging import get_logger
 
 log = get_logger("protocol")
-
-
-@dataclasses.dataclass
-class DeviceState:
-    device_id: int
-    splits: Dict[str, DeviceData]
-    model: object  # SVMModel | ConstantModel
-    report: DeviceReport
 
 
 @dataclasses.dataclass
@@ -64,19 +63,14 @@ class ProtocolResult:
         return max(self.best.values()) / max(self.ideal_mean_auc, 1e-9)
 
 
-def _train_device(dev_id: int, dev: DeviceData, min_samples: int, lam: float, seed: int) -> DeviceState:
-    splits = split_train_test_val(dev, seed=seed + dev_id)
-    tr, va = splits["train"], splits["val"]
-    if dev.n < min_samples or len(np.unique(tr.y)) < 2:
-        model = ConstantModel(float(np.mean(tr.y)))
-        report = DeviceReport(dev_id, tr.n, 0.5, eligible=False)
-        return DeviceState(dev_id, splits, model, report)
-    model = train_svm(tr.x, tr.y, lam=lam)
-    val_auc = roc_auc(va.y, model.predict(va.x))
-    return DeviceState(dev_id, splits, model, DeviceReport(dev_id, tr.n, val_auc, eligible=True))
+def _train_device(dev_id: int, dev: DeviceData, min_samples: int, lam: float, seed: int):
+    """Sequential per-device oracle; canonical body lives in the engine."""
+    from repro.sim.engine import train_device
+
+    return train_device(dev_id, dev, min_samples, lam, seed)
 
 
-def _mean_auc_over_devices(devices: Sequence[DeviceState], scores_fn) -> tuple:
+def _mean_auc_over_devices(devices: Sequence["DeviceOutcome"], scores_fn) -> tuple:
     """scores_fn(X) -> scores. Evaluates once on concatenated test sets."""
     xs = np.concatenate([d.splits["test"].x for d in devices])
     scores = scores_fn(xs)
@@ -99,21 +93,20 @@ def run_protocol(
     random_trials: int = 5,
     distill_proxy: int = 0,
     eval_chunk: int = 8192,
+    engine: str = "bucketed",
 ) -> ProtocolResult:
+    from repro.sim.engine import train_population
+
     m = dataset.n_devices
-    log.info("training %d local models (%s)", m, dataset.name)
-    devices = [
-        _train_device(i, dev, dataset.min_samples, lam, seed)
-        for i, dev in enumerate(dataset.devices)
-    ]
+    log.info("training %d local models (%s, engine=%s)", m, dataset.name, engine)
+    devices = train_population(dataset, lam=lam, seed=seed, mode=engine).outcomes
     reports = [d.report for d in devices]
     svm_bytes = {d.device_id: d.model.nbytes for d in devices}
 
     # --- local baseline (paper Fig. 1 "local") ---
-    local_aucs = []
-    for d in devices:
-        te = d.splits["test"]
-        local_aucs.append(roc_auc(te.y, d.model.predict(te.x)))
+    local_aucs = [
+        roc_auc(d.splits["test"].y, d.local_test_scores) for d in devices
+    ]
     local_mean = float(np.mean(local_aucs))
 
     # --- unattainable ideal: pooled-data SVM (subsampled for tractability) ---
@@ -194,7 +187,7 @@ def run_protocol(
     return result
 
 
-def _proxy_from_validation(devices: Sequence[DeviceState], n: int, rng) -> np.ndarray:
+def _proxy_from_validation(devices: Sequence["DeviceOutcome"], n: int, rng) -> np.ndarray:
     """Paper protocol: proxy data sampled from validation data across
     devices (unlabeled — only features are used)."""
     xs = np.concatenate([d.splits["val"].x for d in devices])

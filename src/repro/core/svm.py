@@ -22,6 +22,12 @@ import numpy as np
 from repro.utils.metrics import roc_auc
 
 
+# SDCA problems are padded to multiples of this (few distinct compiled
+# shapes); the sim engine buckets devices by the same quantum so its
+# batched solves are numerically aligned with train_svm's.
+SDCA_BUCKET = 64
+
+
 def default_gamma(x: np.ndarray) -> float:
     """sklearn-style 'scale' heuristic: 1 / (d * var)."""
     v = float(np.var(x))
@@ -110,7 +116,7 @@ def train_svm(
     if gamma is None:
         gamma = default_gamma(x)
     n = len(y)
-    bucket = max(-(-n // 64) * 64, 64)  # pad to 64-multiples: few recompiles
+    bucket = max(-(-n // SDCA_BUCKET) * SDCA_BUCKET, SDCA_BUCKET)
     xj = jnp.asarray(x, jnp.float32)
     yj = jnp.asarray(y, jnp.float32)
     K = rbf_gram(xj, xj, gamma)

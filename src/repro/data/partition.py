@@ -8,10 +8,27 @@ import numpy as np
 from repro.data.federated import DeviceData
 
 
+def derive_device_seed(seed: int, device_id: int) -> int:
+    """Collision-free per-device seed, independent of iteration order.
+
+    ``seed + device_id`` collides across (seed, id) pairs and couples
+    neighbouring devices; hashing through SeedSequence gives every
+    (run seed, device) pair an independent stream, so runs are
+    reproducible no matter how devices are batched or reordered.
+    """
+    return int(np.random.SeedSequence([seed, device_id]).generate_state(1)[0])
+
+
 def split_train_test_val(
     device: DeviceData, seed: int = 0, fractions=(0.5, 0.4, 0.1)
 ) -> Dict[str, DeviceData]:
-    """Paper protocol: 50/40/10 train/test/validation split per device."""
+    """Paper protocol: 50/40/10 train/test/validation split per device.
+
+    Tiny devices whose rounded train+test allotment consumes every
+    sample draw their validation point from the TEST remainder — never
+    from train, which would leak training data into the val AUC that
+    drives cv selection.
+    """
     assert abs(sum(fractions) - 1.0) < 1e-9
     rng = np.random.default_rng(seed)
     n = device.n
@@ -21,8 +38,11 @@ def split_train_test_val(
     idx_train = perm[:n_train]
     idx_test = perm[n_train : n_train + n_test]
     idx_val = perm[n_train + n_test :]
-    if len(idx_val) == 0:  # tiny devices: reuse a train point for val
-        idx_val = perm[:1]
+    if len(idx_val) == 0:  # tiny devices: borrow val from the test remainder
+        if len(idx_test) > 1:
+            idx_val, idx_test = idx_test[-1:], idx_test[:-1]
+        else:  # degenerate 2-point device: share the single test point
+            idx_val = idx_test[:1]
     mk = lambda idx: DeviceData(x=device.x[idx], y=device.y[idx])
     return {"train": mk(idx_train), "test": mk(idx_test), "val": mk(idx_val)}
 
@@ -34,6 +54,8 @@ def dirichlet_partition(
 
     Lower ``alpha`` -> more skewed per-device label distributions.
     """
+    if len(y) < n_devices:
+        raise ValueError(f"cannot give {n_devices} devices >=1 of {len(y)} samples")
     rng = np.random.default_rng(seed)
     classes = np.unique(y)
     device_indices: List[List[int]] = [[] for _ in range(n_devices)]
@@ -44,11 +66,16 @@ def dirichlet_partition(
         cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
         for dev, chunk in enumerate(np.split(idx, cuts)):
             device_indices[dev].extend(chunk.tolist())
+    # guarantee non-empty devices WITHOUT duplicating samples: empty
+    # devices steal one sample from the currently largest device, so
+    # every sample is assigned to exactly one device.
+    for dev in range(n_devices):
+        if not device_indices[dev]:
+            donor = max(range(n_devices), key=lambda d: len(device_indices[d]))
+            device_indices[dev].append(device_indices[donor].pop())
     out = []
     for dev in range(n_devices):
         idx = np.array(sorted(device_indices[dev]), dtype=int)
-        if len(idx) == 0:  # guarantee non-empty devices
-            idx = rng.integers(0, len(y), size=1)
         out.append(DeviceData(x=x[idx], y=y[idx]))
     return out
 

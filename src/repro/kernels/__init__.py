@@ -2,6 +2,8 @@
 
 rbf_gram.py         Gram matrix for the paper's kernel SVMs (MXU matmul
                     + fused exp epilogue in VMEM)
+batched_gram.py     per-device Gram matrices with per-device bandwidths
+                    (the repro.sim population-training hot path)
 ensemble_score.py   fused ensemble serving: Gram tile + coef reduction
                     + member mean in one pass (no HBM Gram tensor)
 flash_attention.py  blocked online-softmax GQA attention for the

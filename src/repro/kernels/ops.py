@@ -18,6 +18,7 @@ from repro.kernels import ref
 from repro.kernels.rbf_gram import rbf_gram_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ensemble_score import ensemble_score_pallas
+from repro.kernels.batched_gram import batched_rbf_gram_pallas
 
 
 def _on_tpu() -> bool:
@@ -45,6 +46,30 @@ def rbf_gram(x1, x2, gamma: float):
     if _force_interpret():
         return rbf_gram_pallas(x1, x2, gamma, interpret=True)
     return _rbf_ref(x1, x2, gamma)
+
+
+@jax.jit
+def _bgram_tpu(x1, x2, gammas):
+    return batched_rbf_gram_pallas(x1, x2, gammas)
+
+
+@jax.jit
+def _bgram_ref(x1, x2, gammas):
+    return ref.batched_rbf_gram_ref(x1, x2, gammas)
+
+
+def batched_rbf_gram(x1, x2, gammas):
+    """Per-device RBF Gram matrices (the repro.sim training hot path).
+
+    x1: (g, m, d); x2: (g, n, d); gammas: (g,) per-device bandwidths.
+    Returns (g, m, n) fp32. Off-TPU this is the vmap'd jnp oracle — the
+    engine's vmap fallback. Callers mask padded rows/cols themselves.
+    """
+    if _on_tpu():
+        return _bgram_tpu(x1, x2, gammas)
+    if _force_interpret():
+        return batched_rbf_gram_pallas(x1, x2, gammas, interpret=True)
+    return _bgram_ref(x1, x2, gammas)
 
 
 @partial(jax.jit, static_argnames=("causal", "window"))

@@ -18,6 +18,17 @@ def rbf_gram_ref(x1, x2, gamma: float):
     return jnp.exp(-gamma * d2)
 
 
+def batched_rbf_gram_ref(x1, x2, gammas):
+    """Per-device Gram matrices with per-device bandwidths (oracle for
+    batched_rbf_gram — this vmap IS the CPU fallback path).
+
+    x1: (g, m, d); x2: (g, n, d); gammas: (g,). Returns (g, m, n).
+    """
+    return jax.vmap(rbf_gram_ref)(
+        x1.astype(jnp.float32), x2.astype(jnp.float32), gammas.astype(jnp.float32)
+    )
+
+
 def ensemble_score_ref(x, sup, coef, gammas):
     """Mean of member RBF-SVM decision scores (oracle for ensemble_score).
 

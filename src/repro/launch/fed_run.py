@@ -1,12 +1,23 @@
-"""One-shot federated learning driver — transformer instantiation.
+"""One-shot federated learning driver.
 
-The paper's protocol at framework scale: M clients train SMALL models of
-an assigned family to completion (client-parallel via vmap — the member
-axis shards over the mesh 'data' axis on real hardware), the server
-ensembles their predictions, then distills into a student in ONE round.
+Two modes share this entry point:
+
+``--mode lm`` (default) — the transformer instantiation: M clients
+train SMALL models of an assigned family to completion
+(client-parallel via vmap — the member axis shards over the mesh
+'data' axis on real hardware), the server ensembles their predictions,
+then distills into a student in ONE round.
 
   PYTHONPATH=src python -m repro.launch.fed_run --arch llama3.2-1b \
       --clients 4 --local-steps 30 --distill-steps 30
+
+``--mode sim`` — the population-scale SVM protocol on the
+device-parallel ``repro.sim`` engine: pick any registered scenario,
+train hundreds of local models in bucketed vectorized passes, and
+report selection/ensembling quality.
+
+  PYTHONPATH=src python -m repro.launch.fed_run --mode sim \
+      --scenario dirichlet --devices 512 --k 10 50
 """
 from __future__ import annotations
 
@@ -27,8 +38,65 @@ from repro.utils.logging import get_logger
 log = get_logger("fed_run")
 
 
+def run_sim(args) -> dict:
+    """Scenario-driven population round on the repro.sim engine."""
+    from repro.sim import PopulationConfig, list_scenarios, run_population
+
+    if args.scenario == "list":
+        for name, doc in list_scenarios().items():
+            print(f"{name:16s} {doc}")
+        return {}
+    params = dict(kv.split("=", 1) for kv in args.scenario_param)
+    params = {k: float(v) if v.replace(".", "", 1).isdigit() else v
+              for k, v in params.items()}
+    cfg = PopulationConfig(
+        scenario=args.scenario,
+        n_devices=args.devices,
+        seed=args.seed,
+        mean_samples=args.mean_samples,
+        ks=tuple(args.k),
+        engine=args.engine,
+        scenario_params=params,
+    )
+
+    def progress(u):
+        log.info("bucket %4d: +%3d devices (%d/%d done)",
+                 u.bucket, len(u.outcomes), u.done, u.total)
+
+    report = run_population(cfg, on_update=progress)
+    out = {
+        "mode": "sim",
+        "scenario": report.scenario,
+        "engine": args.engine,
+        "devices": report.n_devices,
+        "available": report.n_available,
+        "eligible": report.n_eligible,
+        "mean_local_auc": report.mean_local_auc,
+        "mean_val_auc": report.mean_val_auc,
+        "ensemble_auc": {s: dict(v) for s, v in report.ensemble_auc.items()},
+        "best": report.best,
+        "train_seconds": report.train_seconds,
+        "devices_per_second": report.devices_per_second,
+    }
+    print(json.dumps(out, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", default="lm", choices=["lm", "sim"])
+    ap.add_argument("--scenario", default="dirichlet",
+                    help="sim mode: registered scenario name, or 'list'")
+    ap.add_argument("--devices", type=int, default=256, help="sim mode")
+    ap.add_argument("--mean-samples", type=int, default=80, help="sim mode")
+    ap.add_argument("--k", type=int, nargs="+", default=[10], help="sim mode")
+    ap.add_argument("--engine", default="bucketed", choices=["bucketed", "loop"],
+                    help="sim mode")
+    ap.add_argument("--scenario-param", action="append", default=[],
+                    metavar="KEY=VALUE", help="sim mode: e.g. alpha=0.1")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=30)
@@ -41,6 +109,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    if args.mode == "sim":
+        return run_sim(args)
 
     cfg = get_config(args.arch).reduced()
     M, B, S = args.clients, args.batch, args.seq

@@ -1,0 +1,41 @@
+"""repro.sim — population-scale one-shot FL simulation.
+
+engine.py      device-parallel local training: bucketed batched-Gram +
+               vmap'd SDCA passes (Pallas `batched_rbf_gram` on TPU,
+               vmap'd oracle elsewhere), streaming GroupUpdates; the
+               sequential loop survives as `mode="loop"`, the oracle
+               for equivalence tests
+scenarios.py   registry of named, seedable federation generators (IID,
+               Dirichlet label skew, quantity skew, feature shift,
+               temporal drift, availability/straggler masks)
+population.py  scenario -> engine -> selection -> capped ensemble eval,
+               with streaming progress callbacks
+
+The faithful paper round (`repro.core.run_protocol`) rides the same
+engine; this package adds the scale and scenario axes on top.
+"""
+from repro.sim.engine import (
+    DeviceOutcome,
+    GroupUpdate,
+    PopulationResult,
+    iter_population,
+    train_device,
+    train_population,
+)
+from repro.sim.scenarios import (
+    Federation,
+    SCENARIOS,
+    ScenarioSpec,
+    list_scenarios,
+    make_federation,
+    register_scenario,
+)
+from repro.sim.population import PopulationConfig, PopulationReport, run_population
+
+__all__ = [
+    "DeviceOutcome", "GroupUpdate", "PopulationResult",
+    "iter_population", "train_device", "train_population",
+    "Federation", "SCENARIOS", "ScenarioSpec",
+    "list_scenarios", "make_federation", "register_scenario",
+    "PopulationConfig", "PopulationReport", "run_population",
+]

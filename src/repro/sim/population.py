@@ -1,0 +1,140 @@
+"""Population runner: scenario -> engine -> selection -> ensemble eval.
+
+`run_protocol` (core/protocol.py) is the faithful paper round — every
+ensemble evaluated on every device. At population scale that evaluation
+dominates, so this runner is the scalable counterpart: it trains the
+whole population through the device-parallel engine (streaming progress
+via ``on_update``), runs the paper's selection strategies on the cheap
+scalar reports, and evaluates the selected ensembles on a seeded,
+capped subsample of device test splits via the fused serve path.
+
+    from repro.sim import PopulationConfig, run_population
+    report = run_population(PopulationConfig(
+        scenario="dirichlet", n_devices=512, ks=(10, 50)))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core.ensemble import Ensemble
+from repro.core.selection import select
+from repro.sim.engine import GroupUpdate, train_population
+from repro.sim.scenarios import Federation, make_federation
+from repro.utils.metrics import roc_auc
+from repro.utils.logging import get_logger
+
+log = get_logger("sim.population")
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationConfig:
+    scenario: str = "dirichlet"
+    n_devices: int = 256
+    seed: int = 0
+    mean_samples: int = 80
+    dim: int = 16
+    min_samples: int = 40
+    scenario_params: Mapping = dataclasses.field(default_factory=dict)
+    # training
+    lam: float = 0.01
+    engine: str = "bucketed"        # "bucketed" | "loop" (oracle)
+    # selection + evaluation
+    ks: Sequence[int] = (10,)
+    strategies: Sequence[str] = ("cv", "data", "random")
+    eval_device_cap: int = 128      # devices subsampled for ensemble eval
+    eval_chunk: int = 8192
+
+
+@dataclasses.dataclass
+class PopulationReport:
+    scenario: str
+    n_devices: int
+    n_available: int
+    n_eligible: int
+    mean_local_auc: float
+    mean_val_auc: float
+    ensemble_auc: Dict[str, Dict[int, float]]  # strategy -> k -> mean AUC
+    train_seconds: float
+    devices_per_second: float
+    eval_devices: int
+
+    @property
+    def best(self) -> Dict[str, float]:
+        return {s: max(v.values()) for s, v in self.ensemble_auc.items() if v}
+
+
+def run_population(
+    cfg: PopulationConfig,
+    federation: Optional[Federation] = None,
+    on_update: Optional[Callable[[GroupUpdate], None]] = None,
+) -> PopulationReport:
+    """Simulate one one-shot round at population scale.
+
+    Pass a prebuilt ``federation`` to reuse data across engine modes
+    (the benchmark does); otherwise the scenario registry builds it
+    from the config.
+    """
+    if federation is None:
+        federation = make_federation(
+            cfg.scenario, n_devices=cfg.n_devices, seed=cfg.seed,
+            mean_samples=cfg.mean_samples, dim=cfg.dim,
+            min_samples=cfg.min_samples, **dict(cfg.scenario_params),
+        )
+    ds = federation.dataset
+
+    pop = train_population(
+        ds, on_update=on_update, lam=cfg.lam, seed=cfg.seed, mode=cfg.engine,
+        available=federation.available,
+    )
+    outcomes, train_s = pop.outcomes, pop.seconds
+
+    reports = pop.reports
+    eligible = [r for r in reports if r.eligible]
+    by_id = {o.device_id: o for o in outcomes}
+
+    # seeded, capped subsample of devices for ensemble evaluation
+    rng = np.random.default_rng(cfg.seed + 101)
+    eval_ids = [o.device_id for o in outcomes]
+    if len(eval_ids) > cfg.eval_device_cap:
+        eval_ids = sorted(rng.choice(eval_ids, cfg.eval_device_cap, replace=False))
+    eval_x = np.concatenate([by_id[i].splits["test"].x for i in eval_ids])
+    offsets = np.cumsum([0] + [by_id[i].splits["test"].n for i in eval_ids])
+
+    def mean_auc(scores: np.ndarray) -> float:
+        aucs = [
+            roc_auc(by_id[i].splits["test"].y, scores[offsets[j] : offsets[j + 1]])
+            for j, i in enumerate(eval_ids)
+        ]
+        return float(np.mean(aucs))
+
+    ensemble_auc: Dict[str, Dict[int, float]] = {}
+    for strat in cfg.strategies:
+        ensemble_auc[strat] = {}
+        for k in cfg.ks:
+            ids = (
+                select(strat, reports, k, seed=cfg.seed)
+                if strat == "random" else select(strat, reports, k)
+            )
+            if not ids:
+                continue
+            ens = Ensemble([by_id[i].model for i in ids])
+            ensemble_auc[strat][k] = mean_auc(
+                ens.predict(eval_x, chunk=cfg.eval_chunk)
+            )
+        log.info("%s/%s: %s", ds.name, strat, ensemble_auc[strat])
+
+    return PopulationReport(
+        scenario=cfg.scenario,
+        n_devices=ds.n_devices,
+        n_available=federation.n_available,
+        n_eligible=len(eligible),
+        mean_local_auc=pop.mean_local_auc,
+        mean_val_auc=float(np.mean([r.val_auc for r in reports])) if reports else 0.5,
+        ensemble_auc=ensemble_auc,
+        train_seconds=train_s,
+        devices_per_second=len(outcomes) / max(train_s, 1e-9),
+        eval_devices=len(eval_ids),
+    )

@@ -1,0 +1,249 @@
+"""Scenario registry: named, seedable federation generators.
+
+Conclusions about one-shot selection/ensembling flip under population
+size, heterogeneity regime, and client availability (Amato et al.,
+2505.02426; Allouah et al., 2411.07182) — so the simulation engine
+treats the federation itself as a first-class, sweepable axis. A
+scenario is a registered function from a `ScenarioSpec` to a
+`Federation`: a `FederatedDataset` plus a participation mask.
+
+Registered scenarios (each a distinct heterogeneity mechanism):
+
+  iid             uniform random partition of a shared global pool
+  dirichlet       per-class Dirichlet label skew (param: alpha)
+  quantity_skew   long-tailed device sizes, IID content (param: sigma)
+  feature_shift   per-device affine covariate shift (params: shift,
+                  scale_jitter)
+  temporal_drift  concept means drift across the device index — late
+                  devices see a moved distribution (param: drift)
+  availability    wraps any base scenario with a participation mask +
+                  straggler dropout (params: base, fraction,
+                  straggler_frac)
+
+All randomness flows from `spec.seed`; two specs with equal fields
+produce identical federations. Register new scenarios with
+`@register_scenario("name")` — the population runner, `fed_run --mode
+sim`, and the sweep example pick them up by name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.data.federated import DeviceData, FederatedDataset, _gaussian_concept
+from repro.data.partition import derive_device_seed, dirichlet_partition
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A fully seedable description of one simulated federation."""
+
+    name: str
+    n_devices: int = 64
+    mean_samples: int = 80      # mean local dataset size
+    dim: int = 16
+    seed: int = 0
+    min_samples: int = 40       # ensemble-eligibility threshold
+    params: Mapping[str, object] = dataclasses.field(default_factory=dict)
+
+    def param(self, key: str, default):
+        return self.params.get(key, default)
+
+
+@dataclasses.dataclass
+class Federation:
+    """What a scenario hands the engine: data + who shows up."""
+
+    dataset: FederatedDataset
+    available: np.ndarray  # (n_devices,) bool participation mask
+    spec: ScenarioSpec
+
+    @property
+    def n_available(self) -> int:
+        return int(self.available.sum())
+
+
+ScenarioFn = Callable[[ScenarioSpec], Federation]
+SCENARIOS: Dict[str, ScenarioFn] = {}
+
+
+def register_scenario(name: str) -> Callable[[ScenarioFn], ScenarioFn]:
+    def deco(fn: ScenarioFn) -> ScenarioFn:
+        if name in SCENARIOS:
+            raise ValueError(f"scenario {name!r} already registered")
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def list_scenarios() -> Dict[str, str]:
+    """name -> first docstring line, for --help style listings."""
+    return {
+        name: ((fn.__doc__ or "").strip().splitlines() or ["(undocumented)"])[0]
+        for name, fn in sorted(SCENARIOS.items())
+    }
+
+
+def make_federation(
+    name: str,
+    n_devices: int = 64,
+    seed: int = 0,
+    mean_samples: int = 80,
+    dim: int = 16,
+    min_samples: int = 40,
+    **params,
+) -> Federation:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; options: {sorted(SCENARIOS)}")
+    spec = ScenarioSpec(
+        name=name, n_devices=n_devices, mean_samples=mean_samples, dim=dim,
+        seed=seed, min_samples=min_samples, params=params,
+    )
+    return SCENARIOS[name](spec)
+
+
+# ----------------------------------------------------------------------
+# shared generators
+# ----------------------------------------------------------------------
+
+def _global_pool(
+    spec: ScenarioSpec, n: Optional[int] = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One shared binary concept sampled for the whole population."""
+    rng = np.random.default_rng(spec.seed)
+    if n is None:
+        n = spec.n_devices * spec.mean_samples
+    sample = _gaussian_concept(rng, spec.dim)
+    x, y = sample(rng, n, 0.5, np.zeros(spec.dim, np.float32), noise=0.04)
+    return x, y
+
+
+def _equal_chunks(x, y, n_devices, rng) -> list:
+    perm = rng.permutation(len(y))
+    return [
+        DeviceData(x=x[idx], y=y[idx])
+        for idx in np.array_split(perm, n_devices)
+    ]
+
+
+def _dataset(spec: ScenarioSpec, devices) -> FederatedDataset:
+    return FederatedDataset(
+        name=f"sim:{spec.name}", devices=devices,
+        min_samples=spec.min_samples, dim=spec.dim,
+    )
+
+
+def _all_available(spec: ScenarioSpec) -> np.ndarray:
+    return np.ones(spec.n_devices, bool)
+
+
+# ----------------------------------------------------------------------
+# registered scenarios
+# ----------------------------------------------------------------------
+
+@register_scenario("iid")
+def iid(spec: ScenarioSpec) -> Federation:
+    """IID control: uniform random partition of the global pool."""
+    x, y = _global_pool(spec)
+    rng = np.random.default_rng(spec.seed + 1)
+    return Federation(_dataset(spec, _equal_chunks(x, y, spec.n_devices, rng)),
+                      _all_available(spec), spec)
+
+
+@register_scenario("dirichlet")
+def dirichlet(spec: ScenarioSpec) -> Federation:
+    """Label skew: per-class Dirichlet allocation (alpha, default 0.3)."""
+    x, y = _global_pool(spec)
+    alpha = float(spec.param("alpha", 0.3))
+    devices = dirichlet_partition(x, y, spec.n_devices, alpha=alpha,
+                                  seed=spec.seed + 1)
+    return Federation(_dataset(spec, devices), _all_available(spec), spec)
+
+
+@register_scenario("quantity_skew")
+def quantity_skew(spec: ScenarioSpec) -> Federation:
+    """Quantity skew: long-tailed lognormal device sizes, IID content
+    (sigma, default 1.2, controls the tail)."""
+    sigma = float(spec.param("sigma", 1.2))
+    rng = np.random.default_rng(spec.seed + 1)
+    raw = rng.lognormal(mean=0.0, sigma=sigma, size=spec.n_devices)
+    sizes = np.maximum(
+        (raw / raw.sum() * spec.n_devices * spec.mean_samples).astype(int), 4
+    )
+    # pool sized to the post-clip sum, so heavy tails can never run the
+    # permutation dry and hand out short/empty devices
+    x, y = _global_pool(spec, n=int(sizes.sum()))
+    perm = rng.permutation(len(y))
+    devices, off = [], 0
+    for s in sizes:
+        idx = perm[off : off + s]
+        off += s
+        devices.append(DeviceData(x=x[idx], y=y[idx]))
+    return Federation(_dataset(spec, devices), _all_available(spec), spec)
+
+
+@register_scenario("feature_shift")
+def feature_shift(spec: ScenarioSpec) -> Federation:
+    """Covariate shift: per-device affine transform of IID features
+    (shift, default 1.0; scale_jitter, default 0.3)."""
+    shift = float(spec.param("shift", 1.0))
+    jitter = float(spec.param("scale_jitter", 0.3))
+    x, y = _global_pool(spec)
+    rng = np.random.default_rng(spec.seed + 1)
+    devices = []
+    for dev in _equal_chunks(x, y, spec.n_devices, rng):
+        offset = shift * rng.normal(0, 1, spec.dim).astype(np.float32)
+        scale = (1.0 + jitter * rng.uniform(-1, 1, spec.dim)).astype(np.float32)
+        devices.append(DeviceData(x=dev.x * scale + offset, y=dev.y))
+    return Federation(_dataset(spec, devices), _all_available(spec), spec)
+
+
+@register_scenario("temporal_drift")
+def temporal_drift(spec: ScenarioSpec) -> Federation:
+    """Concept drift: device t's class means move drift * t/(m-1) along
+    a fixed direction — late joiners see a shifted world (drift,
+    default 2.0)."""
+    drift = float(spec.param("drift", 2.0))
+    rng = np.random.default_rng(spec.seed)
+    sample = _gaussian_concept(rng, spec.dim)
+    direction = rng.normal(0, 1, spec.dim).astype(np.float32)
+    direction /= np.linalg.norm(direction)
+    devices = []
+    denom = max(spec.n_devices - 1, 1)
+    for t in range(spec.n_devices):
+        drng = np.random.default_rng(derive_device_seed(spec.seed, t))
+        offset = (drift * t / denom) * direction
+        x, y = sample(drng, spec.mean_samples, 0.5, offset, noise=0.04)
+        devices.append(DeviceData(x=x, y=y))
+    return Federation(_dataset(spec, devices), _all_available(spec), spec)
+
+
+@register_scenario("availability")
+def availability(spec: ScenarioSpec) -> Federation:
+    """Client availability: wraps a base scenario (base, default
+    'dirichlet') with Bernoulli participation (fraction, default 0.7)
+    and straggler dropout (straggler_frac, default 0.1) — stragglers
+    are devices that start the round but miss the single upload
+    deadline, so a one-shot protocol loses them entirely."""
+    base_name = str(spec.param("base", "dirichlet"))
+    if base_name == "availability":
+        raise ValueError("availability cannot wrap itself")
+    fraction = float(spec.param("fraction", 0.7))
+    straggler = float(spec.param("straggler_frac", 0.1))
+    base_params = {
+        k: v for k, v in spec.params.items()
+        if k not in ("base", "fraction", "straggler_frac")
+    }
+    base = make_federation(
+        base_name, n_devices=spec.n_devices, seed=spec.seed,
+        mean_samples=spec.mean_samples, dim=spec.dim,
+        min_samples=spec.min_samples, **base_params,
+    )
+    rng = np.random.default_rng(spec.seed + 2)
+    mask = base.available & (rng.random(spec.n_devices) < fraction)
+    mask &= rng.random(spec.n_devices) >= straggler
+    if not mask.any():  # degenerate draw: keep at least one participant
+        mask[int(rng.integers(spec.n_devices))] = True
+    return Federation(base.dataset, mask, spec)

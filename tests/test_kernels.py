@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.batched_gram import batched_rbf_gram_pallas
 from repro.kernels.ensemble_score import ensemble_score_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rbf_gram import rbf_gram_pallas
@@ -40,6 +41,34 @@ def test_rbf_gram_properties(key):
     # diagonal ~1 up to catastrophic-cancellation noise in ||x||^2+||y||^2-2xy
     np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-4)
     assert (K >= 0).all() and (K <= 1 + 1e-4).all()
+
+
+@pytest.mark.parametrize(
+    "g,m,n,d", [(1, 16, 16, 4), (4, 64, 64, 16), (3, 50, 70, 8), (8, 128, 40, 32), (2, 1, 200, 24)]
+)
+def test_batched_rbf_gram_sweep(key, g, m, n, d):
+    """Per-device Gram kernel vs the vmap'd oracle, ragged shapes."""
+    ks = jax.random.split(key, 3)
+    x1 = jax.random.normal(ks[0], (g, m, d))
+    x2 = jax.random.normal(ks[1], (g, n, d))
+    gammas = jax.random.uniform(ks[2], (g,), minval=0.05, maxval=2.0)
+    out = batched_rbf_gram_pallas(x1, x2, gammas, block_m=64, block_n=64, interpret=True)
+    want = ref.batched_rbf_gram_ref(x1, x2, gammas)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+    assert out.shape == (g, m, n)
+
+
+def test_batched_rbf_gram_matches_per_device_unbatched(key):
+    """Each slice equals the unbatched kernel with that device's gamma."""
+    g, m, n, d = 5, 40, 30, 8
+    ks = jax.random.split(key, 3)
+    x1 = jax.random.normal(ks[0], (g, m, d))
+    x2 = jax.random.normal(ks[1], (g, n, d))
+    gammas = jax.random.uniform(ks[2], (g,), minval=0.1, maxval=1.0)
+    out = batched_rbf_gram_pallas(x1, x2, gammas, interpret=True)
+    for t in range(g):
+        want = ref.rbf_gram_ref(x1[t], x2[t], float(gammas[t]))
+        np.testing.assert_allclose(np.asarray(out[t]), np.asarray(want), atol=1e-5)
 
 
 @pytest.mark.parametrize(

@@ -1,0 +1,223 @@
+"""repro.sim: engine-vs-loop equivalence, scenario registry, population
+runner, and the fed_run sim driver."""
+import numpy as np
+import pytest
+
+from repro.sim import (
+    PopulationConfig,
+    SCENARIOS,
+    iter_population,
+    list_scenarios,
+    make_federation,
+    run_population,
+    train_population,
+)
+
+
+@pytest.fixture(scope="module")
+def mixed_federation():
+    """Quantity-skewed federation: has tiny (constant-fallback) devices
+    AND multiple SDCA buckets — the hardest equivalence case."""
+    return make_federation("quantity_skew", n_devices=20, seed=2,
+                          mean_samples=90, min_samples=40)
+
+
+@pytest.fixture(scope="module")
+def both_modes(mixed_federation):
+    ds = mixed_federation.dataset
+    return (
+        train_population(ds, mode="loop", seed=5),
+        train_population(ds, mode="bucketed", seed=5),
+    )
+
+
+# ----------------------------------------------------------------------
+# engine equivalence (the bucketed path vs the sequential oracle)
+# ----------------------------------------------------------------------
+
+def test_engine_matches_loop_models_and_reports(both_modes):
+    loop, eng = both_modes
+    assert [o.device_id for o in loop.outcomes] == [o.device_id for o in eng.outcomes]
+    assert any(not o.report.eligible for o in loop.outcomes)  # fallbacks present
+    assert len({g.bucket for g in eng.groups if g.bucket}) >= 2  # multi-bucket
+    for a, b in zip(loop.outcomes, eng.outcomes):
+        assert type(a.model) is type(b.model)
+        assert a.report.eligible == b.report.eligible
+        assert a.report.n_train == b.report.n_train
+        if hasattr(a.model, "coef"):
+            assert a.model.gamma == b.model.gamma
+            np.testing.assert_allclose(a.model.coef, b.model.coef, atol=1e-5)
+            np.testing.assert_array_equal(a.model.support_x, b.model.support_x)
+
+
+def test_engine_matches_loop_aucs_within_1e4(both_modes):
+    """The acceptance bar: per-device AUCs match the loop within 1e-4."""
+    loop, eng = both_modes
+    for a, b in zip(loop.outcomes, eng.outcomes):
+        assert abs(a.report.val_auc - b.report.val_auc) < 1e-4
+        assert abs(a.local_test_auc - b.local_test_auc) < 1e-4
+        np.testing.assert_allclose(a.val_scores, b.val_scores, atol=1e-4)
+        np.testing.assert_allclose(
+            a.local_test_scores, b.local_test_scores, atol=1e-4
+        )
+
+
+def test_engine_streams_monotone_progress(mixed_federation):
+    ds = mixed_federation.dataset
+    done_seen, ids = 0, []
+    for u in iter_population(ds, mode="bucketed", seed=5):
+        assert u.done > done_seen and u.done <= u.total == ds.n_devices
+        assert len(u.outcomes) >= 1 and u.seconds >= 0
+        done_seen = u.done
+        ids += [o.device_id for o in u.outcomes]
+    assert sorted(ids) == list(range(ds.n_devices))  # each device exactly once
+
+
+def test_engine_respects_availability_mask(mixed_federation):
+    ds = mixed_federation.dataset
+    mask = np.zeros(ds.n_devices, bool)
+    mask[::3] = True
+    pop = train_population(ds, mode="bucketed", seed=5, available=mask)
+    assert [o.device_id for o in pop.outcomes] == list(np.flatnonzero(mask))
+
+
+def test_engine_seed_changes_splits(mixed_federation):
+    ds = mixed_federation.dataset
+    a = train_population(ds, mode="bucketed", seed=5)
+    b = train_population(ds, mode="bucketed", seed=6)
+    assert any(
+        x.splits["train"].n != y.splits["train"].n
+        or not np.array_equal(x.splits["train"].x, y.splits["train"].x)
+        for x, y in zip(a.outcomes, b.outcomes)
+    )
+
+
+def test_engine_rejects_unknown_mode(mixed_federation):
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        list(iter_population(mixed_federation.dataset, mode="warp"))
+
+
+# ----------------------------------------------------------------------
+# scenario registry
+# ----------------------------------------------------------------------
+
+def test_registry_has_core_scenarios():
+    assert {"iid", "dirichlet", "quantity_skew", "feature_shift",
+            "temporal_drift", "availability"} <= set(SCENARIOS)
+    docs = list_scenarios()
+    assert all(docs[name] for name in SCENARIOS)  # every scenario documented
+
+
+def test_scenarios_seedable_and_deterministic():
+    for name in SCENARIOS:
+        f1 = make_federation(name, n_devices=12, seed=7, mean_samples=40)
+        f2 = make_federation(name, n_devices=12, seed=7, mean_samples=40)
+        f3 = make_federation(name, n_devices=12, seed=8, mean_samples=40)
+        for d1, d2 in zip(f1.dataset.devices, f2.dataset.devices):
+            np.testing.assert_array_equal(d1.x, d2.x)
+            np.testing.assert_array_equal(d1.y, d2.y)
+        np.testing.assert_array_equal(f1.available, f2.available)
+        assert any(
+            d1.n != d3.n or not np.array_equal(d1.x, d3.x)
+            for d1, d3 in zip(f1.dataset.devices, f3.dataset.devices)
+        ), name
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        make_federation("nope")
+
+
+def test_iid_scenario_is_balanced():
+    fed = make_federation("iid", n_devices=16, seed=0, mean_samples=100)
+    fracs = [float(np.mean(d.y > 0)) for d in fed.dataset.devices]
+    assert max(fracs) - min(fracs) < 0.35  # near-uniform label mix
+    assert fed.available.all()
+
+
+def test_dirichlet_scenario_alpha_controls_skew():
+    def mean_skew(alpha):
+        fed = make_federation("dirichlet", n_devices=16, seed=0,
+                              mean_samples=100, alpha=alpha)
+        fracs = [float(np.mean(d.y > 0)) for d in fed.dataset.devices]
+        return float(np.mean([max(f, 1 - f) for f in fracs]))
+
+    assert mean_skew(0.05) > mean_skew(10.0) + 0.1
+
+
+def test_quantity_skew_scenario_long_tail():
+    fed = make_federation("quantity_skew", n_devices=24, seed=0,
+                          mean_samples=80, sigma=1.5)
+    sizes = np.array([d.n for d in fed.dataset.devices])
+    assert sizes.max() > 4 * sizes.min()
+    assert sizes.min() >= 4
+
+
+def test_feature_shift_scenario_moves_device_means():
+    fed = make_federation("feature_shift", n_devices=10, seed=0,
+                          mean_samples=100, shift=2.0)
+    means = np.stack([d.x.mean(axis=0) for d in fed.dataset.devices])
+    spread = np.linalg.norm(means - means.mean(axis=0), axis=1)
+    base = make_federation("iid", n_devices=10, seed=0, mean_samples=100)
+    bmeans = np.stack([d.x.mean(axis=0) for d in base.dataset.devices])
+    bspread = np.linalg.norm(bmeans - bmeans.mean(axis=0), axis=1)
+    assert spread.mean() > 3 * bspread.mean()
+
+
+def test_temporal_drift_scenario_is_progressive():
+    fed = make_federation("temporal_drift", n_devices=12, seed=0,
+                          mean_samples=100, drift=3.0)
+    means = np.stack([d.x.mean(axis=0) for d in fed.dataset.devices])
+    d_far = np.linalg.norm(means[-1] - means[0])
+    d_near = np.linalg.norm(means[1] - means[0])
+    assert d_far > d_near  # late devices drifted farther than neighbours
+
+
+def test_availability_scenario_masks_participation():
+    fed = make_federation("availability", n_devices=40, seed=1,
+                          mean_samples=60, base="iid", fraction=0.5)
+    assert 0 < fed.n_available < 40
+    with pytest.raises(ValueError, match="cannot wrap itself"):
+        make_federation("availability", base="availability")
+
+
+# ----------------------------------------------------------------------
+# population runner + driver
+# ----------------------------------------------------------------------
+
+def test_population_runner_end_to_end():
+    updates = []
+    rep = run_population(
+        PopulationConfig(scenario="dirichlet", n_devices=32, seed=0,
+                         mean_samples=90, min_samples=40,
+                         scenario_params={"alpha": 1.0}, ks=(3, 5)),
+        on_update=updates.append,
+    )
+    assert updates and updates[-1].done == 32
+    assert rep.n_devices == 32 and rep.n_available == 32
+    assert 0 < rep.n_eligible <= 32
+    assert rep.devices_per_second > 0
+    for strat in ("cv", "data", "random"):
+        assert set(rep.ensemble_auc[strat]) <= {3, 5}
+    # ensembling a skewed-but-learnable federation shouldn't lose badly
+    assert max(rep.best.values()) > rep.mean_local_auc - 0.02
+
+
+def test_fed_run_sim_mode(tmp_path):
+    from repro.launch.fed_run import main
+
+    out = tmp_path / "sim.json"
+    report = main([
+        "--mode", "sim", "--scenario", "iid", "--devices", "16",
+        "--mean-samples", "60", "--k", "3", "--out", str(out),
+    ])
+    assert report["scenario"] == "iid" and report["devices"] == 16
+    assert 0.0 <= report["mean_local_auc"] <= 1.0
+    assert out.exists()
+
+
+def test_fed_run_sim_scenario_list(capsys):
+    from repro.launch.fed_run import main
+
+    assert main(["--mode", "sim", "--scenario", "list"]) == {}
+    assert "dirichlet" in capsys.readouterr().out

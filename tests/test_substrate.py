@@ -15,6 +15,7 @@ from repro.data import (
     split_train_test_val,
     token_batches,
 )
+from repro.data.partition import derive_device_seed
 from repro.data.federated import DeviceData
 from repro.optim import adamw, apply_updates, chain, clip_by_global_norm, cosine_decay, linear_warmup_cosine, sgd
 from repro.utils import roc_auc, tree_global_norm, tree_size_bytes, tree_stack, tree_unstack
@@ -167,6 +168,60 @@ def test_split_fractions():
     dev = DeviceData(x=np.zeros((100, 3), np.float32), y=np.ones(100, np.float32))
     sp = split_train_test_val(dev, seed=1)
     assert sp["train"].n == 50 and sp["test"].n == 40 and sp["val"].n == 10
+
+
+def test_split_tiny_device_val_never_from_train():
+    """Regression (train/val leakage): tiny devices used to recycle a
+    TRAIN point as the val set, inflating the val AUC that drives cv
+    selection. Val must come from the test remainder instead."""
+    for n in range(2, 12):
+        x = np.arange(n, dtype=np.float32)[:, None]  # value == sample id
+        dev = DeviceData(x=x, y=np.ones(n, np.float32))
+        for seed in range(5):
+            sp = split_train_test_val(dev, seed=seed)
+            assert sp["val"].n >= 1 and sp["test"].n >= 1
+            train_ids = set(sp["train"].x[:, 0].tolist())
+            val_ids = set(sp["val"].x[:, 0].tolist())
+            assert not (train_ids & val_ids), (n, seed)
+
+
+def test_derive_device_seed_unique_and_deterministic():
+    seeds = {derive_device_seed(s, d) for s in range(8) for d in range(64)}
+    assert len(seeds) == 8 * 64  # seed+dev_id would collide heavily here
+    assert derive_device_seed(3, 7) == derive_device_seed(3, 7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_devices=st.integers(2, 16), alpha=st.floats(0.05, 5.0), seed=st.integers(0, 30))
+def test_dirichlet_partition_exactly_once(n_devices, alpha, seed):
+    """Every sample lands on exactly one device; no device is empty."""
+    rng = np.random.default_rng(seed)
+    n = 150
+    x = np.arange(n, dtype=np.float32)[:, None]  # value == sample id
+    y = rng.integers(0, 3, n).astype(np.float32)
+    parts = dirichlet_partition(x, y, n_devices, alpha=alpha, seed=seed)
+    assert len(parts) == n_devices
+    assert all(p.n >= 1 for p in parts)
+    assigned = np.sort(np.concatenate([p.x[:, 0] for p in parts]))
+    np.testing.assert_array_equal(assigned, np.arange(n, dtype=np.float32))
+
+
+def test_dirichlet_skew_monotone_in_alpha():
+    """Smoke: lower alpha -> more per-device label skew (mean max-class
+    fraction), averaged over seeds for stability."""
+
+    def skew(alpha):
+        vals = []
+        for seed in range(3):
+            rng = np.random.default_rng(100 + seed)
+            x = rng.normal(size=(400, 2)).astype(np.float32)
+            y = rng.integers(0, 2, 400).astype(np.float32)
+            for p in dirichlet_partition(x, y, 10, alpha=alpha, seed=seed):
+                frac = float(np.mean(p.y == 1.0))
+                vals.append(max(frac, 1.0 - frac))
+        return float(np.mean(vals))
+
+    assert skew(0.05) > skew(5.0) + 0.05
 
 
 @settings(max_examples=20, deadline=None)
