@@ -1,0 +1,108 @@
+"""Communication-substrate benchmark (repro.comm).
+
+Two questions, one table:
+
+1. **Bytes-vs-AUC frontier per codec.** One population is trained once
+   (iid scenario); the SAME cv-selected ensemble is then shipped through
+   every registered codec. Rows per codec:
+     * ``comm.wire.<codec>.bytes``  — exact ledger total for the k
+       uploads (len of the encoded payloads, headers included);
+     * ``comm.wire.<codec>.auc``    — mean AUC of the DECODED ensemble
+       over the population's test splits (derived column: AUC delta vs
+       fp32 — the price of the compression);
+     * ``comm.wire.<codec>.ratio``  — payload size relative to fp32.
+
+2. **Quantized scoring throughput.** ``q8_score`` times the int8
+   ensemble scored straight from its wire representation through the
+   fused ``ensemble_score_q8`` kernel (packed QuantizedStackedEnsemble,
+   on-the-fly dequant) against the fused fp32 ``ensemble_score`` path
+   on the same queries. On TPU the q8 path additionally reads a 4x
+   smaller support matrix from HBM; off-TPU both run their jnp oracles.
+
+Pass ``smoke`` as argv[1] (CI) to shrink the population.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import assert_not_interpret, csv_row, timeit_us
+
+
+def run(n_devices: int = 64, k: int = 10, score_batch: int = 2048):
+    assert_not_interpret()
+    from repro.comm import CODECS, CommLedger, decode, encode
+    from repro.core.ensemble import Ensemble
+    from repro.core.selection import select
+    from repro.sim import make_federation, train_population
+    from repro.utils.metrics import roc_auc
+
+    rows = []
+    fed = make_federation("iid", n_devices=n_devices, seed=5, mean_samples=80)
+    pop = train_population(fed.dataset, seed=5)
+    by_id = {o.device_id: o for o in pop.outcomes}
+    ids = select("cv", pop.reports, k)
+    members = [by_id[i].model for i in ids]
+
+    xs = np.concatenate([o.splits["test"].x for o in pop.outcomes])
+    ys = [o.splits["test"].y for o in pop.outcomes]
+    lens = [len(y) for y in ys]
+
+    def mean_auc(scores: np.ndarray) -> float:
+        off, aucs = 0, []
+        for y, n in zip(ys, lens):
+            aucs.append(roc_auc(y, scores[off : off + n]))
+            off += n
+        return float(np.mean(aucs))
+
+    def ship(codec_name):
+        """Encode the selected models through one codec; exact ledger
+        total + decoded-ensemble AUC."""
+        ledger = CommLedger()
+        decoded = []
+        for i in ids:
+            blob = encode(by_id[i].model, codec_name)
+            ledger.record("up", "model_upload", len(blob), device_id=i,
+                          codec=codec_name, tag=f"upload_{codec_name}")
+            decoded.append(decode(blob))
+        total = ledger.total(kind="model_upload")
+        return total, mean_auc(Ensemble(decoded).predict(xs)), decoded
+
+    base_bytes, base_auc, _ = ship("fp32")  # baseline independent of registry order
+    q8_members = None
+    for name in CODECS:
+        if name == "fp32":
+            total, auc = base_bytes, base_auc
+        else:
+            total, auc, decoded = ship(name)
+            if name == "int8":
+                q8_members = decoded
+        rows.append(csv_row(f"comm.wire.{name}.bytes", total,
+                            f"{k} uploads, exact ledger total"))
+        rows.append(csv_row(f"comm.wire.{name}.auc", f"{auc:.4f}",
+                            f"delta vs fp32 {auc - base_auc:+.4f}"))
+        rows.append(csv_row(f"comm.wire.{name}.ratio", f"{total / base_bytes:.3f}",
+                            "payload size vs fp32"))
+
+    # --- q8 vs fp32 scoring throughput on the same ensemble ---
+    fp32_ens = Ensemble(members)
+    q8_ens = Ensemble(q8_members)
+    xq = xs[:score_batch]
+    if len(xq) < score_batch:  # smoke populations have few test rows
+        xq = np.tile(xq, (-(-score_batch // len(xq)), 1))[:score_batch]
+    fp32_us = timeit_us(lambda: fp32_ens.predict(xq), repeats=3, warmup=1)
+    q8_us = timeit_us(lambda: q8_ens.predict(xq), repeats=3, warmup=1)
+    rows.append(csv_row("comm.q8_score.fp32_us", f"{fp32_us:.0f}",
+                        f"fused fp32 path, batch {len(xq)} x k={k}"))
+    rows.append(csv_row("comm.q8_score.int8_us", f"{q8_us:.0f}",
+                        f"ensemble_score_q8 path, {fp32_us / q8_us:.2f}x vs fp32"))
+    return rows
+
+
+if __name__ == "__main__":
+    smoke = len(sys.argv) > 1 and sys.argv[1] == "smoke"
+    t0 = time.time()
+    print("\n".join(run(n_devices=24, k=5, score_batch=512) if smoke else run()))
+    print(f"# {time.time() - t0:.1f}s")

@@ -20,6 +20,7 @@ def main() -> None:
     assert_not_interpret()
     from benchmarks import (
         ablation_distill_loss,
+        comm_bench,
         comm_cost,
         fig1_mean_auc,
         fig2_score_distribution,
@@ -37,6 +38,7 @@ def main() -> None:
         ("fig2", fig2_score_distribution.run),
         ("fig3", fig3_distill_proxy.run),
         ("comm", comm_cost.run),
+        ("comm_bench", comm_bench.run),
         ("kernels", kernel_bench.run),
         ("serve", serve_bench.run),
         ("sim", sim_bench.run),

@@ -1,0 +1,56 @@
+"""Budgeted one-shot uploads: the bytes-vs-AUC frontier.
+
+Sweeps upload budget x wire codec on one dirichlet federation. For a
+fixed byte budget, a smaller codec buys MORE ensemble members (the
+rank-greedy knapsack of ``repro.comm.budget`` skips models that no
+longer fit), so the interesting question is where lossy-but-cheap
+beats lossless-but-few. Every byte figure is the exact total of the
+wire-encoded payloads actually selected.
+
+The population is trained ONCE; only selection, encoding, and decoded
+evaluation vary across the sweep (training is independent of both
+axes — re-running it per cell would just repeat identical work).
+
+  PYTHONPATH=src python examples/budgeted_upload.py
+"""
+import numpy as np
+
+from repro.comm import ModelExchange
+from repro.core.ensemble import Ensemble
+from repro.sim import make_federation, train_population
+from repro.utils.metrics import roc_auc
+
+CODECS = ("fp32", "fp16", "int8", "topk:0.25")
+BUDGETS_KIB = (16, 48, 128, None)  # None: unconstrained
+
+
+def main(n_devices: int = 96, k: int = 16, scenario: str = "dirichlet"):
+    fed = make_federation(scenario, n_devices=n_devices, seed=0, alpha=0.5)
+    pop = train_population(fed.dataset, seed=0)
+    models = {o.device_id: o.model for o in pop.outcomes}
+    xs = np.concatenate([o.splits["test"].x for o in pop.outcomes])
+    tests = [(o.splits["test"].y, o.splits["test"].n) for o in pop.outcomes]
+
+    def mean_auc(scores: np.ndarray) -> float:
+        off, aucs = 0, []
+        for y, n in tests:
+            aucs.append(roc_auc(y, scores[off : off + n]))
+            off += n
+        return float(np.mean(aucs))
+
+    print(f"{'codec':10s} {'budget':>8s} {'uploads':>8s} {'bytes':>9s} "
+          f"{'cv AUC':>8s}")
+    for codec in CODECS:
+        for budget_kib in BUDGETS_KIB:
+            budget = None if budget_kib is None else budget_kib * 1024
+            ex = ModelExchange(models, pop.reports, codec=codec, budget_bytes=budget)
+            ids = ex.pick("cv", k)
+            used = sum(len(ex.upload(i)) for i in ids)
+            auc = mean_auc(Ensemble([ex.received(i) for i in ids]).predict(xs))
+            btxt = "inf" if budget is None else f"{budget_kib}KiB"
+            print(f"{codec:10s} {btxt:>8s} {len(ids):8d} {used:9d} {auc:8.4f}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,12 @@
-from repro.checkpoint.manager import save_checkpoint, restore_checkpoint, CheckpointManager
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    restore_checkpoint,
+    restore_payload,
+    save_checkpoint,
+    save_payload,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint", "restore_checkpoint", "CheckpointManager",
+    "save_payload", "restore_payload",
+]

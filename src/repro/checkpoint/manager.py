@@ -57,6 +57,23 @@ def restore_checkpoint(path: str, like: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def save_payload(path: str, blob: bytes, step: Optional[int] = None) -> str:
+    """Persist a ``repro.comm`` wire payload through the checkpoint
+    format (one uint8 leaf), so encoded uploads/ensembles round-trip
+    the same npz + manifest machinery as model pytrees."""
+    from repro.comm.wire import payload_to_tree
+
+    return save_checkpoint(path, payload_to_tree(blob), step=step)
+
+
+def restore_payload(path: str) -> bytes:
+    """Inverse of ``save_payload``: the exact wire bytes back."""
+    from repro.comm.wire import tree_to_payload
+
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        return tree_to_payload({"wire": data["wire"]})
+
+
 class CheckpointManager:
     """Step-indexed checkpoints with max_to_keep retention."""
 

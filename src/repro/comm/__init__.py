@@ -1,0 +1,57 @@
+"""repro.comm — the one-shot communication substrate.
+
+The paper's defining constraint is ONE round of communication; this
+package makes that round physical instead of a ``model.nbytes`` sum:
+
+wire.py     versioned wire format + codec registry (fp32 / fp16 / int8
+            per-column affine / top-|coef| sparsification) for SVM,
+            linear, constant, ensemble, and DeviceReport payloads —
+            ``len(encode(obj, codec))`` is the exact cost, and int8
+            payloads decode to ``QuantizedSVM``s scored through the
+            ``rbf_gram_q8`` kernel without materializing fp32 supports
+ledger.py   ``CommLedger``: every protocol message (metadata, uploads,
+            downloads) as a typed ``CommEvent`` with its exact size
+exchange.py ``ModelExchange``: the shared server-side round plumbing —
+            price each model once, pick under the budget, evaluate the
+            decoded models (used by core.protocol and sim.population)
+budget.py   budget-constrained selection: strategy-rank greedy knapsack
+            over encoded sizes, composing with the cv/data/random
+            strategies from ``core/selection.py`` (slack budget = no-op)
+channel.py  per-device uplink model (lognormal bandwidth, drop masks,
+            round deadlines) — prices payloads in seconds and feeds the
+            availability scenario's participation mask
+
+Codec dispatch policy: the codec is chosen once per round (CLI
+``--codec``, ``PopulationConfig.codec``, ``run_protocol(codec=...)``)
+and applies to every model upload in that round; metadata and headers
+are codec-independent. ``fp32`` is the lossless reference — with it the
+decoded round is bit-identical to the pre-wire protocol.
+"""
+from repro.comm.budget import BudgetedSelection, budgeted_select
+from repro.comm.channel import ChannelModel, make_channel
+from repro.comm.exchange import ModelExchange
+from repro.comm.ledger import CommEvent, CommLedger
+from repro.comm.wire import (
+    CODECS,
+    Codec,
+    QuantizedStackedEnsemble,
+    QuantizedSVM,
+    REPORT_NBYTES,
+    WIRE_VERSION,
+    decode,
+    encode,
+    encoded_nbytes,
+    get_codec,
+    payload_to_tree,
+    tree_to_payload,
+)
+
+__all__ = [
+    "BudgetedSelection", "budgeted_select",
+    "ChannelModel", "make_channel",
+    "CommEvent", "CommLedger", "ModelExchange",
+    "CODECS", "Codec", "QuantizedStackedEnsemble", "QuantizedSVM",
+    "REPORT_NBYTES", "WIRE_VERSION",
+    "decode", "encode", "encoded_nbytes", "get_codec",
+    "payload_to_tree", "tree_to_payload",
+]

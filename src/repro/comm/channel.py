@@ -1,0 +1,87 @@
+"""Per-device uplink channel model: bandwidth, drops, deadlines.
+
+The one-shot round is only "one round" if every selected upload lands
+before the server aggregates — so availability is not just membership,
+it is bandwidth against a deadline. A ``ChannelModel`` assigns each
+device a lognormal uplink bandwidth plus a drop mask (devices that
+never reach the server), and prices any payload in SECONDS:
+
+    upload_seconds(i, nbytes)   one device's upload time
+    straggler_mask(nbytes)      who misses the round deadline at that
+                                payload size — codec choice changes who
+                                straggles, not just who pays
+    time_to_aggregate(sizes)    the server-side round latency: the
+                                slowest selected upload
+
+``sim/scenarios.py``'s availability scenario builds its participation
+mask FROM a channel (drops + stragglers at a nominal fp32 payload), so
+federation membership and round latency come from one physical model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    bandwidth: np.ndarray   # (n_devices,) uplink bytes/second
+    dropped: np.ndarray     # (n_devices,) bool: offline, never reports
+    deadline_s: float       # single-round upload deadline (inf: none)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.bandwidth)
+
+    def upload_seconds(self, device_id: int, nbytes: int) -> float:
+        return float(nbytes) / float(self.bandwidth[device_id])
+
+    def straggler_mask(self, nbytes: int) -> np.ndarray:
+        """Devices whose upload of an ``nbytes`` payload misses the
+        deadline. A smaller codec literally rescues devices."""
+        return (float(nbytes) / self.bandwidth) > self.deadline_s
+
+    def participation(self, nbytes: int) -> np.ndarray:
+        return ~self.dropped & ~self.straggler_mask(nbytes)
+
+    def time_to_aggregate(self, sizes: Mapping[int, int]) -> float:
+        """Round latency: the server waits for its slowest selected
+        upload (uploads are concurrent — devices do not share the pipe)."""
+        if not sizes:
+            return 0.0
+        return max(self.upload_seconds(i, n) for i, n in sizes.items())
+
+
+def make_channel(
+    n_devices: int,
+    seed: int = 0,
+    mean_bandwidth: float = 128 * 1024.0,
+    sigma: float = 1.0,
+    drop_frac: float = 0.0,
+    deadline_s: Optional[float] = None,
+    nominal_bytes: Optional[int] = None,
+    straggler_frac: float = 0.0,
+) -> ChannelModel:
+    """Seeded lognormal uplink fleet.
+
+    The deadline can be given directly (``deadline_s``) or calibrated:
+    with ``nominal_bytes`` set, it is placed at the upload-time quantile
+    where a ``straggler_frac`` share of the fleet misses it for that
+    payload size.
+    """
+    rng = np.random.default_rng(seed)
+    bandwidth = mean_bandwidth * rng.lognormal(mean=0.0, sigma=sigma, size=n_devices)
+    bandwidth = np.maximum(bandwidth, 1.0)
+    dropped = rng.random(n_devices) < drop_frac
+    if deadline_s is None:
+        if nominal_bytes is not None and straggler_frac > 0.0:
+            times = nominal_bytes / bandwidth
+            deadline_s = float(np.quantile(times, 1.0 - straggler_frac))
+        else:
+            deadline_s = float("inf")
+    return ChannelModel(
+        bandwidth=bandwidth.astype(np.float64), dropped=dropped,
+        deadline_s=float(deadline_s),
+    )

@@ -1,0 +1,404 @@
+"""Versioned wire format for the one-shot upload (and download) path.
+
+Every protocol message is a self-describing byte string:
+
+    +-------+---------+------+----------+------------------------+
+    | magic | version | kind | codec id | kind-specific body     |
+    | "OS"  |  u8     | u8   | u8       | ...                    |
+    +-------+---------+------+----------+------------------------+
+
+``len(encode(obj, codec))`` IS the communication cost — there is no
+separate estimate to drift out of sync; the ledger records exactly
+these lengths.
+
+Payload kinds: ``SVMModel`` (the paper's local model), ``LinearSVM``
+(the averaging/FedAvg baseline model), ``ConstantModel`` (data-deficient
+fallback), ``Ensemble`` (length-prefixed member messages), and
+``DeviceReport`` (the pre-round scalar metadata — 18 bytes on the wire).
+
+Codecs (support-vector / weight compression; headers and gamma are
+codec-independent):
+
+    fp32       lossless float32 round-trip (the reference codec)
+    fp16       supports + coefs as float16 (half the payload)
+    int8       per-column affine int8 supports (scale/zero per feature
+               column), fp32 coefs; decodes to a ``QuantizedSVM`` that
+               scores through the ``rbf_gram_q8`` kernel — the fp32
+               support matrix is never materialized
+    topk       top-|coef| sparsification: keep ceil(ratio * n) support
+               vectors by |dual coefficient| (fp32); "topk:0.5" selects
+               the ratio, default 0.25
+
+Codec names parse as ``name[:param]`` via ``get_codec``; registry order
+is the benchmark sweep order. All multi-byte fields are little-endian.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.averaging import LinearSVM
+from repro.core.ensemble import Ensemble, chunked_bucket_predict
+from repro.core.selection import DeviceReport
+from repro.core.svm import ConstantModel, SVMModel
+
+WIRE_MAGIC = b"OS"
+WIRE_VERSION = 1
+
+_HEADER = struct.Struct("<2sBBB")  # magic, version, kind, codec id
+
+KIND_SVM = 1
+KIND_LINEAR = 2
+KIND_CONST = 3
+KIND_ENSEMBLE = 4
+KIND_REPORT = 5
+
+_SVM_PREFIX = struct.Struct("<IId")     # n, d, gamma
+_LINEAR_PREFIX = struct.Struct("<Id")   # d, bias
+_CONST_BODY = struct.Struct("<d")       # value
+_COUNT = struct.Struct("<I")
+_REPORT_BODY = struct.Struct("<IIfB")   # device_id, n_train, val_auc, eligible
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One entry of the codec registry; ``param`` is the codec's single
+    knob (the topk keep ratio; unused elsewhere)."""
+
+    name: str
+    codec_id: int
+    param: float = 0.0
+
+    @property
+    def spec(self) -> str:
+        """Round-trippable name (``get_codec(c.spec) == c``)."""
+        if self.name == "topk":
+            return f"topk:{self.param:g}"
+        return self.name
+
+
+CODECS: Dict[str, Codec] = {
+    "fp32": Codec("fp32", 0),
+    "fp16": Codec("fp16", 1),
+    "int8": Codec("int8", 2),
+    "topk": Codec("topk", 3, param=0.25),
+}
+_CODEC_BY_ID = {c.codec_id: c for c in CODECS.values()}
+
+
+def get_codec(spec) -> Codec:
+    """Resolve ``"fp16"`` / ``"topk:0.5"`` / a Codec instance."""
+    if isinstance(spec, Codec):
+        return spec
+    name, _, param = str(spec).partition(":")
+    if name not in CODECS:
+        raise KeyError(f"unknown codec {spec!r}; options {sorted(CODECS)}")
+    base = CODECS[name]
+    if param:
+        if name != "topk":
+            raise ValueError(f"codec {name!r} takes no parameter, got {spec!r}")
+        ratio = float(param)
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(f"topk ratio must be in (0, 1], got {ratio}")
+        return dataclasses.replace(base, param=ratio)
+    return base
+
+
+@dataclasses.dataclass
+class QuantizedSVM:
+    """An int8-codec SVM payload kept in its wire representation.
+
+    Scores through ``kernels.ops.rbf_gram_q8`` (on-the-fly dequant in
+    VMEM) so the fp32 support matrix never exists on the server; call
+    ``dequantize()`` only when an explicit fp32 ``SVMModel`` is wanted.
+    """
+
+    q: np.ndarray       # (n, d) int8 supports
+    scale: np.ndarray   # (d,) fp32 per-column affine scale
+    zero: np.ndarray    # (d,) fp32 per-column affine zero point
+    coef: np.ndarray    # (n,) fp32 dual coefficients
+    gamma: float
+
+    def predict(self, x: np.ndarray, chunk: int = 8192) -> np.ndarray:
+        from repro.kernels import ops as kops
+
+        x = np.asarray(x, np.float32)
+        if len(x) == 0:
+            return np.zeros(0, np.float32)
+        outs = []
+        for start in range(0, len(x), chunk):
+            K = kops.rbf_gram_q8(
+                x[start : start + chunk], self.q, self.scale, self.zero, self.gamma
+            )
+            outs.append(np.asarray(K @ self.coef))
+        return np.concatenate(outs)
+
+    def dequantize(self) -> SVMModel:
+        sup = self.q.astype(np.float32) * self.scale[None, :] + self.zero[None, :]
+        return SVMModel(support_x=sup, coef=self.coef.copy(), gamma=self.gamma)
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.nbytes + self.scale.nbytes + self.zero.nbytes + self.coef.nbytes + 8
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedStackedEnsemble:
+    """Packed homogeneous int8 ensemble — the quantized mirror of
+    ``core.ensemble.StackedEnsemble``. Supports stay int8 end-to-end;
+    scoring is one fused ``ensemble_score_q8`` call per query chunk
+    (on-the-fly dequant in VMEM, no fp32 support matrix in HBM)."""
+
+    q: np.ndarray       # (k, n_max, d) int8, zero-padded supports
+    scale: np.ndarray   # (k, d) per-member per-column affine scale
+    zero: np.ndarray    # (k, d) per-member per-column affine zero
+    coef: np.ndarray    # (k, n_max) fp32, zero on padding
+    gammas: np.ndarray  # (k,)
+
+    @classmethod
+    def from_members(cls, members: Sequence["QuantizedSVM"]) -> "QuantizedStackedEnsemble":
+        if not members:
+            raise ValueError("empty ensemble")
+        n_max = max(len(m.coef) for m in members)
+        k, d = len(members), members[0].q.shape[1]
+        q = np.zeros((k, n_max, d), np.int8)
+        scale = np.ones((k, d), np.float32)
+        zero = np.zeros((k, d), np.float32)
+        coef = np.zeros((k, n_max), np.float32)
+        gammas = np.zeros((k,), np.float32)
+        for i, m in enumerate(members):
+            n = len(m.coef)
+            q[i, :n] = m.q
+            scale[i] = m.scale
+            zero[i] = m.zero
+            coef[i, :n] = m.coef
+            gammas[i] = m.gamma
+        return cls(q, scale, zero, coef, gammas)
+
+    def score(self, x) -> np.ndarray:
+        """Fused mean member score for one query block. x: (b, d) -> (b,)."""
+        from repro.kernels import ops as kops
+
+        return kops.ensemble_score_q8(
+            x, self.q, self.scale, self.zero, self.coef, self.gammas
+        )
+
+    def predict(self, x: np.ndarray, chunk: int = 4096) -> np.ndarray:
+        """Chunked fused scoring; the shared power-of-two bucketing of
+        ``core.ensemble.chunked_bucket_predict``."""
+        return chunked_bucket_predict(self.score, x, chunk)
+
+
+def _quantize_columns(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-column affine int8: q = round((x - zero) / scale) in [-127, 127]."""
+    lo = x.min(axis=0)
+    hi = x.max(axis=0)
+    scale = ((hi - lo) / 254.0).astype(np.float32)
+    scale = np.where(scale > 0, scale, np.float32(1.0))
+    zero = ((hi + lo) / 2.0).astype(np.float32)
+    q = np.clip(np.round((x - zero) / scale), -127, 127).astype(np.int8)
+    return q, scale, zero
+
+
+def _arr(a: np.ndarray, dtype: str) -> bytes:
+    return np.ascontiguousarray(a).astype(dtype).tobytes()
+
+
+class WireReader:
+    """Cursor over one wire message (validates magic/version up front)."""
+
+    def __init__(self, blob: bytes):
+        self.blob = blob
+        self.off = 0
+        magic, version, kind, codec_id = self.unpack(_HEADER)
+        if magic != WIRE_MAGIC:
+            raise ValueError(f"bad wire magic {magic!r}")
+        if version != WIRE_VERSION:
+            raise ValueError(f"unsupported wire version {version}")
+        if codec_id not in _CODEC_BY_ID:
+            raise ValueError(f"unknown codec id {codec_id}")
+        self.kind = kind
+        self.codec = _CODEC_BY_ID[codec_id]
+
+    def unpack(self, st: struct.Struct):
+        vals = st.unpack_from(self.blob, self.off)
+        self.off += st.size
+        return vals
+
+    def array(self, count: int, dtype: str, shape=None) -> np.ndarray:
+        nbytes = count * np.dtype(dtype).itemsize
+        a = np.frombuffer(self.blob, dtype, count=count, offset=self.off).copy()
+        self.off += nbytes
+        return a if shape is None else a.reshape(shape)
+
+    def take(self, n: int) -> bytes:
+        out = self.blob[self.off : self.off + n]
+        self.off += n
+        return out
+
+
+def _header(kind: int, codec: Codec) -> bytes:
+    return _HEADER.pack(WIRE_MAGIC, WIRE_VERSION, kind, codec.codec_id)
+
+
+def _encode_svm(model: SVMModel, codec: Codec) -> bytes:
+    sup = np.asarray(model.support_x, np.float32)
+    coef = np.asarray(model.coef, np.float32)
+    n, d = sup.shape
+    if codec.name == "topk":
+        m = max(1, int(np.ceil(codec.param * n)))
+        keep = np.sort(np.argsort(-np.abs(coef), kind="stable")[:m])
+        sup, coef, n = sup[keep], coef[keep], m
+    parts = [_header(KIND_SVM, codec), _SVM_PREFIX.pack(n, d, float(model.gamma))]
+    if codec.name in ("fp32", "topk"):
+        parts += [_arr(sup, "<f4"), _arr(coef, "<f4")]
+    elif codec.name == "fp16":
+        parts += [_arr(sup, "<f2"), _arr(coef, "<f2")]
+    else:  # int8
+        q, scale, zero = _quantize_columns(sup)
+        parts += [_arr(scale, "<f4"), _arr(zero, "<f4"), q.tobytes(), _arr(coef, "<f4")]
+    return b"".join(parts)
+
+
+def _encode_quantized(model: QuantizedSVM) -> bytes:
+    """Re-emit an int8 payload from its kept wire representation
+    (bit-exact: no re-quantization)."""
+    n, d = model.q.shape
+    return b"".join([
+        _header(KIND_SVM, CODECS["int8"]),
+        _SVM_PREFIX.pack(n, d, float(model.gamma)),
+        _arr(model.scale, "<f4"), _arr(model.zero, "<f4"),
+        model.q.astype(np.int8).tobytes(), _arr(model.coef, "<f4"),
+    ])
+
+
+def _decode_svm(r: WireReader, materialize: bool):
+    n, d, gamma = r.unpack(_SVM_PREFIX)
+    if r.codec.name in ("fp32", "topk"):
+        sup = r.array(n * d, "<f4", (n, d))
+        coef = r.array(n, "<f4")
+        return SVMModel(support_x=sup, coef=coef, gamma=gamma)
+    if r.codec.name == "fp16":
+        sup = r.array(n * d, "<f2", (n, d)).astype(np.float32)
+        coef = r.array(n, "<f2").astype(np.float32)
+        return SVMModel(support_x=sup, coef=coef, gamma=gamma)
+    scale = r.array(d, "<f4")
+    zero = r.array(d, "<f4")
+    q = r.array(n * d, "i1", (n, d))
+    coef = r.array(n, "<f4")
+    model = QuantizedSVM(q=q, scale=scale, zero=zero, coef=coef, gamma=gamma)
+    return model.dequantize() if materialize else model
+
+
+def _encode_linear(model: LinearSVM, codec: Codec) -> bytes:
+    w = np.asarray(model.w, np.float32)
+    d = len(w)
+    parts = [_header(KIND_LINEAR, codec), _LINEAR_PREFIX.pack(d, float(model.b))]
+    if codec.name == "fp32":
+        parts.append(_arr(w, "<f4"))
+    elif codec.name == "fp16":
+        parts.append(_arr(w, "<f2"))
+    elif codec.name == "int8":
+        q, scale, zero = _quantize_columns(w[:, None])
+        parts += [_arr(scale, "<f4"), _arr(zero, "<f4"), q.tobytes()]
+    else:  # topk: keep top-|w| entries with their indices
+        m = max(1, int(np.ceil(codec.param * d)))
+        keep = np.sort(np.argsort(-np.abs(w), kind="stable")[:m])
+        parts += [_COUNT.pack(m), _arr(keep, "<u4"), _arr(w[keep], "<f4")]
+    return b"".join(parts)
+
+
+def _decode_linear(r: WireReader) -> LinearSVM:
+    d, b = r.unpack(_LINEAR_PREFIX)
+    if r.codec.name == "fp32":
+        w = r.array(d, "<f4")
+    elif r.codec.name == "fp16":
+        w = r.array(d, "<f2").astype(np.float32)
+    elif r.codec.name == "int8":
+        scale = r.array(1, "<f4")
+        zero = r.array(1, "<f4")
+        q = r.array(d, "i1")
+        w = q.astype(np.float32) * scale[0] + zero[0]
+    else:
+        (m,) = r.unpack(_COUNT)
+        idx = r.array(m, "<u4")
+        vals = r.array(m, "<f4")
+        w = np.zeros(d, np.float32)
+        w[idx] = vals
+    return LinearSVM(w=w, b=b)
+
+
+def encode(obj, codec="fp32") -> bytes:
+    """Encode a protocol payload; ``len(...)`` of the result is the
+    exact number of bytes the message costs on the wire."""
+    codec = get_codec(codec)
+    if isinstance(obj, SVMModel):
+        return _encode_svm(obj, codec)
+    if isinstance(obj, QuantizedSVM):
+        if codec.name != "int8":
+            raise ValueError(
+                f"QuantizedSVM payloads re-encode only as int8 (their kept "
+                f"wire representation), not {codec.name!r}; dequantize() first"
+            )
+        return _encode_quantized(obj)
+    if isinstance(obj, LinearSVM):
+        return _encode_linear(obj, codec)
+    if isinstance(obj, ConstantModel):
+        return _header(KIND_CONST, codec) + _CONST_BODY.pack(float(obj.value))
+    if isinstance(obj, Ensemble):
+        blobs = [encode(m, codec) for m in obj.members]
+        return b"".join(
+            [_header(KIND_ENSEMBLE, codec), _COUNT.pack(len(blobs))]
+            + [_COUNT.pack(len(b)) + b for b in blobs]
+        )
+    if isinstance(obj, DeviceReport):
+        return _header(KIND_REPORT, codec) + _REPORT_BODY.pack(
+            obj.device_id, obj.n_train, float(obj.val_auc), int(obj.eligible)
+        )
+    raise TypeError(f"cannot wire-encode {type(obj).__name__}")
+
+
+def decode(blob: bytes, *, materialize: bool = False):
+    """Decode one wire message. int8 SVM payloads decode to
+    ``QuantizedSVM`` (kernel-scored) unless ``materialize=True``."""
+    r = WireReader(blob)
+    if r.kind == KIND_SVM:
+        return _decode_svm(r, materialize)
+    if r.kind == KIND_LINEAR:
+        return _decode_linear(r)
+    if r.kind == KIND_CONST:
+        (value,) = r.unpack(_CONST_BODY)
+        return ConstantModel(value)
+    if r.kind == KIND_ENSEMBLE:
+        (count,) = r.unpack(_COUNT)
+        members = []
+        for _ in range(count):
+            (nbytes,) = r.unpack(_COUNT)
+            members.append(decode(r.take(nbytes), materialize=materialize))
+        return Ensemble(members)
+    if r.kind == KIND_REPORT:
+        device_id, n_train, val_auc, eligible = r.unpack(_REPORT_BODY)
+        return DeviceReport(device_id, n_train, float(val_auc), bool(eligible))
+    raise ValueError(f"unknown wire kind {r.kind}")
+
+
+def encoded_nbytes(obj, codec="fp32") -> int:
+    """Exact encoded size; defined as ``len(encode(obj, codec))``."""
+    return len(encode(obj, codec))
+
+
+# the pre-round metadata exchange costs exactly this much per device
+REPORT_NBYTES = len(encode(DeviceReport(0, 0, 0.5, True)))
+
+
+def payload_to_tree(blob: bytes) -> Dict[str, np.ndarray]:
+    """Wrap a wire payload as a one-leaf pytree so it can ride through
+    the npz checkpoint manager (``checkpoint.manager.save_payload``)."""
+    return {"wire": np.frombuffer(blob, np.uint8).copy()}
+
+
+def tree_to_payload(tree: Dict[str, np.ndarray]) -> bytes:
+    return np.asarray(tree["wire"], np.uint8).tobytes()

@@ -28,6 +28,30 @@ import numpy as np
 from repro.core.svm import SVMModel
 
 
+def chunked_bucket_predict(score_fn, x: np.ndarray, chunk: int) -> np.ndarray:
+    """Chunked/streaming evaluation over a host array of queries.
+
+    Each chunk is zero-padded up to a power-of-two bucket before the
+    jit'd ``score_fn`` call, so ragged workloads (e.g. per-device test
+    splits of hundreds of distinct sizes) compile O(log chunk) shapes
+    instead of one per distinct batch size. Shared by the fp32 and int8
+    packed-ensemble serve paths — one bucketing policy, one compile
+    -shape behavior.
+    """
+    if len(x) == 0:
+        return np.zeros(0, np.float32)
+    x = np.asarray(x, np.float32)
+    outs = []
+    for start in range(0, len(x), chunk):
+        xq = x[start : start + chunk]
+        b = len(xq)
+        bp = max(8, 1 << (b - 1).bit_length())  # next power of two
+        if bp != b:
+            xq = np.pad(xq, ((0, bp - b), (0, 0)))
+        outs.append(np.asarray(score_fn(xq))[:b])
+    return np.concatenate(outs)
+
+
 @dataclasses.dataclass(frozen=True)
 class StackedEnsemble:
     """Packed homogeneous ensemble: the fused serving representation."""
@@ -78,31 +102,18 @@ class StackedEnsemble:
         return kops.ensemble_score(jnp.asarray(x, jnp.float32), self.sup, self.coef, self.gammas)
 
     def predict(self, x: np.ndarray, chunk: int = 4096) -> np.ndarray:
-        """Chunked/streaming evaluation over a host array of queries.
-
-        Each chunk is zero-padded up to a power-of-two bucket before the
-        jit'd scoring call, so ragged workloads (e.g. per-device test
-        splits of hundreds of distinct sizes) compile O(log chunk)
-        shapes instead of one per distinct batch size.
-        """
-        if len(x) == 0:
-            return np.zeros(0, np.float32)
-        x = np.asarray(x, np.float32)
-        outs = []
-        for start in range(0, len(x), chunk):
-            xq = x[start : start + chunk]
-            b = len(xq)
-            bp = max(8, 1 << (b - 1).bit_length())  # next power of two
-            if bp != b:
-                xq = np.pad(xq, ((0, bp - b), (0, 0)))
-            outs.append(np.asarray(self.score(xq))[:b])
-        return np.concatenate(outs)
+        """Chunked scoring with power-of-two bucket padding (see
+        ``chunked_bucket_predict``)."""
+        return chunked_bucket_predict(self.score, x, chunk)
 
 
 @dataclasses.dataclass
 class Ensemble:
     members: List[SVMModel]
     _stacked: Optional[StackedEnsemble] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
+    _qstacked: Optional[object] = dataclasses.field(
         default=None, init=False, repr=False, compare=False
     )
 
@@ -125,10 +136,21 @@ class Ensemble:
         return self._stacked
 
     def predict(self, x: np.ndarray, chunk: int = 4096) -> np.ndarray:
-        """Mean of member decision scores via the fused serve path."""
+        """Mean of member decision scores via the fused serve path.
+
+        All-``QuantizedSVM`` ensembles (int8 wire payloads) pack once
+        into a ``QuantizedStackedEnsemble`` and score through the fused
+        ``ensemble_score_q8`` kernel — supports stay int8 end-to-end.
+        """
         if not self.members:
             raise ValueError("empty ensemble")
         if any(not isinstance(m, SVMModel) for m in self.members):
+            from repro.comm.wire import QuantizedStackedEnsemble, QuantizedSVM
+
+            if all(isinstance(m, QuantizedSVM) for m in self.members):
+                if self._qstacked is None:
+                    self._qstacked = QuantizedStackedEnsemble.from_members(self.members)
+                return self._qstacked.predict(x, chunk=chunk)
             # heterogeneous (e.g. ConstantModel baselines): per-member mean
             return ensemble_predict_mean(self.members, x)
         return self.stacked().predict(x, chunk=chunk)

@@ -10,8 +10,18 @@ Simulates the full round on a federated dataset:
   5. ensembles are evaluated on every device's test split (mean AUC);
   6. optionally, the server distills the best ensemble on proxy data.
 
-Communication accounting counts protocol bytes (uploaded model sizes,
-downloaded global model) — the quantity the paper optimizes.
+Communication is accounted on a ``repro.comm`` ledger: every protocol
+message — each device's pre-round ``DeviceReport`` (18 wire bytes),
+every selected model upload, the distilled-student download — is
+recorded as a typed ``CommEvent`` with its EXACT wire-encoded size
+(``len(wire.encode(...))``), and ``comm_bytes`` is the ledger's per-tag
+sum. Uploads go through a wire codec (``codec=``: fp32 / fp16 / int8 /
+topk); ensembles are evaluated on the DECODED models, so lossy codecs
+honestly pay their AUC cost, and int8 payloads score through the
+``rbf_gram_q8`` kernel without materializing fp32 supports. An optional
+``budget_bytes`` cap turns selection into the greedy knapsack of
+``repro.comm.budget`` (strategy-rank order, unaffordable models
+skipped; a slack budget changes nothing).
 
 Ensemble evaluation streams the concatenated test sets through the
 fused ``ensemble_score`` serve path in ``eval_chunk``-sized blocks
@@ -28,18 +38,20 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
 
 import numpy as np
 
 from repro.core.svm import train_svm, default_gamma
 from repro.core.ensemble import Ensemble
-from repro.core.selection import select
 from repro.core.distill import distill_svm
 from repro.data.federated import FederatedDataset, DeviceData
 from repro.data.partition import pool_devices
 from repro.utils.metrics import roc_auc
 from repro.utils.logging import get_logger
+
+if TYPE_CHECKING:  # runtime import would cycle: comm.budget <- core.selection
+    from repro.comm import CommLedger
 
 log = get_logger("protocol")
 
@@ -52,8 +64,10 @@ class ProtocolResult:
     ensemble_auc: Dict[str, Dict[int, float]]  # strategy -> k -> mean AUC
     full_ensemble_auc: float
     best: Dict[str, float]  # strategy -> best-k mean AUC
-    comm_bytes: Dict[str, float]
+    comm_bytes: Dict[str, float]  # ledger per-tag byte totals
     per_device: Dict[str, np.ndarray]
+    ledger: Optional["CommLedger"] = None
+    codec: str = "fp32"
 
     def relative_gain_over_local(self) -> float:
         b = max(self.best.values())
@@ -94,14 +108,26 @@ def run_protocol(
     distill_proxy: int = 0,
     eval_chunk: int = 8192,
     engine: str = "bucketed",
+    codec: str = "fp32",
+    budget_bytes: Optional[int] = None,
 ) -> ProtocolResult:
+    # deferred: repro.comm pulls core.selection back in at import time
+    from repro.comm import CommLedger, ModelExchange, decode, encode
     from repro.sim.engine import train_population
 
     m = dataset.n_devices
-    log.info("training %d local models (%s, engine=%s)", m, dataset.name, engine)
     devices = train_population(dataset, lam=lam, seed=seed, mode=engine).outcomes
     reports = [d.report for d in devices]
-    svm_bytes = {d.device_id: d.model.nbytes for d in devices}
+    eligible_ids = [r.device_id for r in reports if r.eligible]
+
+    # --- the wire: priced uploads, decoded models, metadata on ledger ---
+    ex = ModelExchange({d.device_id: d.model for d in devices}, reports,
+                       codec=codec, budget_bytes=budget_bytes)
+    codec_spec = ex.codec
+    log.info("trained %d local models (%s, engine=%s, codec=%s)",
+             m, dataset.name, engine, codec_spec)
+    ledger = CommLedger()
+    ex.record_metadata(ledger)
 
     # --- local baseline (paper Fig. 1 "local") ---
     local_aucs = [
@@ -118,73 +144,76 @@ def run_protocol(
     ideal_model = train_svm(pooled.x, pooled.y, lam=lam)
     ideal_mean, ideal_aucs = _mean_auc_over_devices(devices, ideal_model.predict)
 
-    # --- ensembles per strategy and k ---
-    by_id = {d.device_id: d for d in devices}
+    # --- ensembles per strategy and k (evaluated on DECODED models) ---
     ensemble_auc: Dict[str, Dict[int, float]] = {}
-    comm: Dict[str, float] = {"metadata_upload": 16.0 * m}
     for strat in strategies:
         ensemble_auc[strat] = {}
         for k in ks:
             if strat == "random":
                 trials = []
                 for t in range(random_trials):
-                    ids = select("random", reports, k, seed=seed + 17 * t)
-                    if not ids:
+                    tids = ex.pick("random", k, seed + 17 * t)
+                    if not tids:
                         continue
-                    ens = Ensemble([by_id[i].model for i in ids])
+                    ens = Ensemble([ex.received(i) for i in tids])
                     auc, _ = _mean_auc_over_devices(devices, partial(ens.predict, chunk=eval_chunk))
                     trials.append(auc)
                 if trials:
                     ensemble_auc[strat][k] = float(np.mean(trials))
-                ids = select("random", reports, k, seed=seed)
+                ids = ex.pick("random", k, seed)
             else:
-                ids = select(strat, reports, k)
+                ids = ex.pick(strat, k, seed)
                 if not ids:
                     continue
-                ens = Ensemble([by_id[i].model for i in ids])
+                ens = Ensemble([ex.received(i) for i in ids])
                 auc, _ = _mean_auc_over_devices(devices, partial(ens.predict, chunk=eval_chunk))
                 ensemble_auc[strat][k] = auc
-            comm[f"upload_{strat}_k{k}"] = float(sum(svm_bytes[i] for i in ids))
+            ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
         log.info("%s/%s: %s", dataset.name, strat, ensemble_auc[strat])
 
     # --- full ensemble of all eligible devices ---
-    eligible_ids = [r.device_id for r in reports if r.eligible]
-    full_ens = Ensemble([by_id[i].model for i in eligible_ids])
+    full_ens = Ensemble([ex.received(i) for i in eligible_ids])
     full_auc, full_aucs = _mean_auc_over_devices(devices, partial(full_ens.predict, chunk=eval_chunk))
-    comm["upload_full"] = float(sum(svm_bytes[i] for i in eligible_ids))
+    ex.record_uploads(ledger, eligible_ids, "upload_full")
 
     best = {s: max(v.values()) for s, v in ensemble_auc.items() if v}
-    result = ProtocolResult(
+    per_device = {
+        "local": np.array(local_aucs),
+        "ideal": ideal_aucs,
+        "full_ensemble": full_aucs,
+    }
+    # --- optional distillation of the best ensemble ---
+    if distill_proxy > 0:
+        best_strat = max(best, key=best.get)
+        best_k = max(ensemble_auc[best_strat], key=ensemble_auc[best_strat].get)
+        ids = ex.pick(best_strat, best_k, seed)
+        ens = Ensemble([ex.received(i) for i in ids])
+        proxy = _proxy_from_validation(devices, distill_proxy, rng)
+        gamma = default_gamma(proxy)
+        student = distill_svm(ens.predict, proxy, gamma)
+        # the student is downloaded through the same codec — evaluate
+        # what devices decode, so its AUC and its bytes match up
+        student_wire = encode(student, codec_spec)
+        dist_auc, dist_aucs = _mean_auc_over_devices(devices, decode(student_wire).predict)
+        per_device["distilled"] = dist_aucs
+        ledger.record("down", "student_download", len(student_wire),
+                      codec=codec_spec, tag="download_distilled")
+        ledger.record("down", "ensemble_download", ex.ensemble_nbytes(ids),
+                      codec=codec_spec, tag="download_ensemble")
+        ensemble_auc.setdefault("distilled", {})[best_k] = dist_auc
+
+    return ProtocolResult(
         dataset=dataset.name,
         local_mean_auc=local_mean,
         ideal_mean_auc=ideal_mean,
         ensemble_auc=ensemble_auc,
         full_ensemble_auc=full_auc,
         best=best,
-        comm_bytes=comm,
-        per_device={
-            "local": np.array(local_aucs),
-            "ideal": ideal_aucs,
-            "full_ensemble": full_aucs,
-        },
+        comm_bytes=ledger.as_dict(),
+        per_device=per_device,
+        ledger=ledger,
+        codec=codec_spec,
     )
-    # --- optional distillation of the best ensemble ---
-    if distill_proxy > 0:
-        best_strat = max(best, key=best.get)
-        best_k = max(result.ensemble_auc[best_strat], key=result.ensemble_auc[best_strat].get)
-        ids = select(best_strat, reports, best_k) if best_strat != "random" else select(
-            "random", reports, best_k, seed=seed
-        )
-        ens = Ensemble([by_id[i].model for i in ids])
-        proxy = _proxy_from_validation(devices, distill_proxy, rng)
-        gamma = default_gamma(proxy)
-        student = distill_svm(ens.predict, proxy, gamma)
-        dist_auc, dist_aucs = _mean_auc_over_devices(devices, student.predict)
-        result.per_device["distilled"] = dist_aucs
-        result.comm_bytes["download_distilled"] = float(student.nbytes)
-        result.comm_bytes["download_ensemble"] = float(ens.nbytes)
-        result.ensemble_auc.setdefault("distilled", {})[best_k] = dist_auc
-    return result
 
 
 def _proxy_from_validation(devices: Sequence["DeviceOutcome"], n: int, rng) -> np.ndarray:

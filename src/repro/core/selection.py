@@ -48,12 +48,13 @@ def data_selection(
 def random_selection(
     reports: Sequence[DeviceReport], k: int, seed: int = 0
 ) -> List[int]:
-    """Random selection: the server samples k eligible devices."""
+    """Random selection: the server samples k eligible devices. The
+    returned order is the (seeded) draw order, so k=len(reports) yields
+    the strategy's full preference ranking — which is what budgeted
+    selection (repro.comm.budget) composes with."""
     cands = [r.device_id for r in reports if r.eligible]
     rng = np.random.default_rng(seed)
-    if len(cands) <= k:
-        return list(cands)
-    return list(rng.choice(cands, size=k, replace=False))
+    return [int(i) for i in rng.permutation(cands)[:k]]
 
 
 STRATEGIES = {

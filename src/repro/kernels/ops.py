@@ -16,8 +16,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.rbf_gram import rbf_gram_pallas
+from repro.kernels.rbf_gram_q8 import rbf_gram_q8_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ensemble_score import ensemble_score_pallas
+from repro.kernels.ensemble_score_q8 import ensemble_score_q8_pallas
 from repro.kernels.batched_gram import batched_rbf_gram_pallas
 
 
@@ -46,6 +48,33 @@ def rbf_gram(x1, x2, gamma: float):
     if _force_interpret():
         return rbf_gram_pallas(x1, x2, gamma, interpret=True)
     return _rbf_ref(x1, x2, gamma)
+
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _q8_tpu(x, q, scale, zero, gamma):
+    return rbf_gram_q8_pallas(x, q, scale, zero, gamma)
+
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _q8_ref(x, q, scale, zero, gamma):
+    return ref.rbf_gram_q8_ref(x, q, scale, zero, gamma)
+
+
+def rbf_gram_q8(x, q, scale, zero, gamma: float):
+    """Gram tiles straight from int8-quantized supports (the repro.comm
+    quantized-scoring hot path).
+
+    x: (m, d) fp32; q: (n, d) int8 per-column affine quantized supports;
+    scale, zero: (d,) affine params. Returns (m, n) fp32. The Pallas
+    path dequantizes tiles on the fly in VMEM — the fp32 support matrix
+    never exists in HBM.
+    """
+    gamma = float(gamma)
+    if _on_tpu():
+        return _q8_tpu(x, q, scale, zero, gamma)
+    if _force_interpret():
+        return rbf_gram_q8_pallas(x, q, scale, zero, gamma, interpret=True)
+    return _q8_ref(x, q, scale, zero, gamma)
 
 
 @jax.jit
@@ -112,3 +141,29 @@ def ensemble_score(x, sup, coef, gammas):
     if _force_interpret():
         return ensemble_score_pallas(x, sup, coef, gammas, interpret=True)
     return _ens_ref(x, sup, coef, gammas)
+
+
+@jax.jit
+def _ens_q8_tpu(x, q, scale, zero, coef, gammas):
+    return ensemble_score_q8_pallas(x, q, scale, zero, coef, gammas)
+
+
+@jax.jit
+def _ens_q8_ref(x, q, scale, zero, coef, gammas):
+    return ref.ensemble_score_q8_ref(x, q, scale, zero, coef, gammas)
+
+
+def ensemble_score_q8(x, q, scale, zero, coef, gammas):
+    """Fused ensemble scoring straight from int8 wire payloads (the
+    repro.comm quantized serve path).
+
+    x: (b, d); q: (k, n_max, d) int8; scale, zero: (k, d) per-member
+    affine params; coef: (k, n_max); gammas: (k,). Returns (b,) fp32.
+    The Pallas path keeps supports int8 in HBM and dequantizes tiles on
+    the fly in VMEM.
+    """
+    if _on_tpu():
+        return _ens_q8_tpu(x, q, scale, zero, coef, gammas)
+    if _force_interpret():
+        return ensemble_score_q8_pallas(x, q, scale, zero, coef, gammas, interpret=True)
+    return _ens_q8_ref(x, q, scale, zero, coef, gammas)

@@ -29,6 +29,19 @@ def batched_rbf_gram_ref(x1, x2, gammas):
     )
 
 
+def rbf_gram_q8_ref(x, q, scale, zero, gamma: float):
+    """Gram between fp32 queries and int8 affine-quantized supports
+    (oracle for rbf_gram_q8): dequantize, then the fp32 Gram.
+
+    x: (m, d) fp32; q: (n, d) int8; scale, zero: (d,) per-column affine
+    parameters. Returns (m, n).
+    """
+    s = q.astype(jnp.float32) * scale.astype(jnp.float32)[None, :] + zero.astype(
+        jnp.float32
+    )[None, :]
+    return rbf_gram_ref(x, s, gamma)
+
+
 def ensemble_score_ref(x, sup, coef, gammas):
     """Mean of member RBF-SVM decision scores (oracle for ensemble_score).
 
@@ -45,6 +58,21 @@ def ensemble_score_ref(x, sup, coef, gammas):
         sup.astype(jnp.float32), coef.astype(jnp.float32), gammas.astype(jnp.float32)
     )  # (k, b)
     return jnp.mean(scores, axis=0)
+
+
+def ensemble_score_q8_ref(x, q, scale, zero, coef, gammas):
+    """Mean of member scores from int8 affine-quantized supports
+    (oracle for ensemble_score_q8): dequantize per member, then the
+    fp32 ensemble oracle.
+
+    x: (b, d); q: (k, n_max, d) int8; scale, zero: (k, d); coef:
+    (k, n_max); gammas: (k,). Returns (b,).
+    """
+    sup = (
+        q.astype(jnp.float32) * scale.astype(jnp.float32)[:, None, :]
+        + zero.astype(jnp.float32)[:, None, :]
+    )
+    return ensemble_score_ref(x, sup, coef, gammas)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):

@@ -18,6 +18,11 @@ report selection/ensembling quality.
 
   PYTHONPATH=src python -m repro.launch.fed_run --mode sim \
       --scenario dirichlet --devices 512 --k 10 50
+
+Sim-mode uploads go through the ``repro.comm`` wire (``--codec fp32 |
+fp16 | int8 | topk[:ratio]``) with an optional per-selection byte cap
+(``--budget-bytes``); the report includes the ledger's exact per-tag
+byte totals.
 """
 from __future__ import annotations
 
@@ -57,6 +62,8 @@ def run_sim(args) -> dict:
         ks=tuple(args.k),
         engine=args.engine,
         scenario_params=params,
+        codec=args.codec,
+        budget_bytes=args.budget_bytes,
     )
 
     def progress(u):
@@ -77,7 +84,14 @@ def run_sim(args) -> dict:
         "best": report.best,
         "train_seconds": report.train_seconds,
         "devices_per_second": report.devices_per_second,
+        "codec": report.codec,
+        "budget_bytes": report.budget_bytes,
+        "comm": report.comm,
     }
+    if report.time_to_aggregate:
+        out["time_to_aggregate"] = {
+            s: dict(v) for s, v in report.time_to_aggregate.items()
+        }
     print(json.dumps(out, indent=2))
     if args.out:
         with open(args.out, "w") as f:
@@ -97,6 +111,12 @@ def main(argv=None):
                     help="sim mode")
     ap.add_argument("--scenario-param", action="append", default=[],
                     metavar="KEY=VALUE", help="sim mode: e.g. alpha=0.1")
+    ap.add_argument("--codec", default="fp32",
+                    help="sim mode: wire codec for model uploads "
+                         "(fp32 | fp16 | int8 | topk[:ratio])")
+    ap.add_argument("--budget-bytes", type=int, default=None,
+                    help="sim mode: upload byte budget per selection "
+                         "(strategy-rank greedy knapsack over encoded sizes)")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=30)

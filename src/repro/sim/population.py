@@ -19,8 +19,8 @@ from typing import Callable, Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
+from repro.comm import CommLedger, ModelExchange
 from repro.core.ensemble import Ensemble
-from repro.core.selection import select
 from repro.sim.engine import GroupUpdate, train_population
 from repro.sim.scenarios import Federation, make_federation
 from repro.utils.metrics import roc_auc
@@ -46,6 +46,9 @@ class PopulationConfig:
     strategies: Sequence[str] = ("cv", "data", "random")
     eval_device_cap: int = 128      # devices subsampled for ensemble eval
     eval_chunk: int = 8192
+    # communication (repro.comm)
+    codec: str = "fp32"             # wire codec for model uploads
+    budget_bytes: Optional[int] = None  # per-selection upload byte cap
 
 
 @dataclasses.dataclass
@@ -60,6 +63,13 @@ class PopulationReport:
     train_seconds: float
     devices_per_second: float
     eval_devices: int
+    codec: str = "fp32"
+    budget_bytes: Optional[int] = None
+    comm: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # strategy -> k -> server round latency (slowest selected upload);
+    # populated only when the federation carries a ChannelModel
+    time_to_aggregate: Dict[str, Dict[int, float]] = dataclasses.field(default_factory=dict)
+    ledger: Optional[CommLedger] = None
 
     @property
     def best(self) -> Dict[str, float]:
@@ -95,6 +105,13 @@ def run_population(
     eligible = [r for r in reports if r.eligible]
     by_id = {o.device_id: o for o in outcomes}
 
+    # --- communication: wire codec + typed byte ledger (repro.comm);
+    # only devices that showed up report metadata ---
+    ex = ModelExchange({o.device_id: o.model for o in outcomes}, reports,
+                       codec=cfg.codec, budget_bytes=cfg.budget_bytes)
+    ledger = CommLedger()
+    ex.record_metadata(ledger)
+
     # seeded, capped subsample of devices for ensemble evaluation
     rng = np.random.default_rng(cfg.seed + 101)
     eval_ids = [o.device_id for o in outcomes]
@@ -111,19 +128,23 @@ def run_population(
         return float(np.mean(aucs))
 
     ensemble_auc: Dict[str, Dict[int, float]] = {}
+    time_to_aggregate: Dict[str, Dict[int, float]] = {}
     for strat in cfg.strategies:
         ensemble_auc[strat] = {}
+        time_to_aggregate[strat] = {}
         for k in cfg.ks:
-            ids = (
-                select(strat, reports, k, seed=cfg.seed)
-                if strat == "random" else select(strat, reports, k)
-            )
+            ids = ex.pick(strat, k, cfg.seed)
             if not ids:
                 continue
-            ens = Ensemble([by_id[i].model for i in ids])
+            ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
+            ens = Ensemble([ex.received(i) for i in ids])
             ensemble_auc[strat][k] = mean_auc(
                 ens.predict(eval_x, chunk=cfg.eval_chunk)
             )
+            if federation.channel is not None:
+                time_to_aggregate[strat][k] = federation.channel.time_to_aggregate(
+                    {i: len(ex.upload(i)) for i in ids}
+                )
         log.info("%s/%s: %s", ds.name, strat, ensemble_auc[strat])
 
     return PopulationReport(
@@ -137,4 +158,11 @@ def run_population(
         train_seconds=train_s,
         devices_per_second=len(outcomes) / max(train_s, 1e-9),
         eval_devices=len(eval_ids),
+        codec=ex.codec,
+        budget_bytes=cfg.budget_bytes,
+        comm=ledger.summary(),
+        time_to_aggregate=(
+            time_to_aggregate if federation.channel is not None else {}
+        ),
+        ledger=ledger,
     )

@@ -32,6 +32,7 @@ from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro.comm.channel import ChannelModel, make_channel
 from repro.data.federated import DeviceData, FederatedDataset, _gaussian_concept
 from repro.data.partition import derive_device_seed, dirichlet_partition
 
@@ -54,11 +55,13 @@ class ScenarioSpec:
 
 @dataclasses.dataclass
 class Federation:
-    """What a scenario hands the engine: data + who shows up."""
+    """What a scenario hands the engine: data + who shows up + (for
+    channel-aware scenarios) how fast their uplinks are."""
 
     dataset: FederatedDataset
     available: np.ndarray  # (n_devices,) bool participation mask
     spec: ScenarioSpec
+    channel: Optional[ChannelModel] = None  # prices uploads in seconds
 
     @property
     def n_available(self) -> int:
@@ -223,10 +226,13 @@ def temporal_drift(spec: ScenarioSpec) -> Federation:
 @register_scenario("availability")
 def availability(spec: ScenarioSpec) -> Federation:
     """Client availability: wraps a base scenario (base, default
-    'dirichlet') with Bernoulli participation (fraction, default 0.7)
-    and straggler dropout (straggler_frac, default 0.1) — stragglers
-    are devices that start the round but miss the single upload
-    deadline, so a one-shot protocol loses them entirely."""
+    'dirichlet') with a physical uplink channel — Bernoulli drops
+    (fraction, default 0.7, is the share NOT dropped) plus stragglers
+    (straggler_frac, default 0.1): the slowest devices, whose upload of
+    a nominal fp32 payload misses the round deadline. Membership and
+    round latency come from the same ``repro.comm.ChannelModel``, so a
+    one-shot round here costs time-to-aggregate, not just headcount
+    (mean_bandwidth, default 128 KiB/s; bandwidth_sigma, default 1.0)."""
     base_name = str(spec.param("base", "dirichlet"))
     if base_name == "availability":
         raise ValueError("availability cannot wrap itself")
@@ -234,16 +240,25 @@ def availability(spec: ScenarioSpec) -> Federation:
     straggler = float(spec.param("straggler_frac", 0.1))
     base_params = {
         k: v for k, v in spec.params.items()
-        if k not in ("base", "fraction", "straggler_frac")
+        if k not in ("base", "fraction", "straggler_frac",
+                     "mean_bandwidth", "bandwidth_sigma")
     }
     base = make_federation(
         base_name, n_devices=spec.n_devices, seed=spec.seed,
         mean_samples=spec.mean_samples, dim=spec.dim,
         min_samples=spec.min_samples, **base_params,
     )
-    rng = np.random.default_rng(spec.seed + 2)
-    mask = base.available & (rng.random(spec.n_devices) < fraction)
-    mask &= rng.random(spec.n_devices) >= straggler
+    # a nominal fp32 upload (mean-sized device) calibrates the deadline
+    nominal_bytes = spec.mean_samples * spec.dim * 4
+    channel = make_channel(
+        spec.n_devices, seed=spec.seed + 2,
+        mean_bandwidth=float(spec.param("mean_bandwidth", 128 * 1024.0)),
+        sigma=float(spec.param("bandwidth_sigma", 1.0)),
+        drop_frac=1.0 - fraction,
+        nominal_bytes=nominal_bytes, straggler_frac=straggler,
+    )
+    mask = base.available & channel.participation(nominal_bytes)
     if not mask.any():  # degenerate draw: keep at least one participant
+        rng = np.random.default_rng(spec.seed + 3)
         mask[int(rng.integers(spec.n_devices))] = True
-    return Federation(base.dataset, mask, spec)
+    return Federation(base.dataset, mask, spec, channel=channel)

@@ -1,0 +1,499 @@
+"""repro.comm: wire codecs, byte ledger, budgeted selection, channel
+model, and the budgeted end-to-end protocol (the ISSUE acceptance bar).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.comm import (
+    CODECS,
+    CommLedger,
+    QuantizedSVM,
+    REPORT_NBYTES,
+    budgeted_select,
+    decode,
+    encode,
+    encoded_nbytes,
+    get_codec,
+    make_channel,
+)
+from repro.core.averaging import LinearSVM
+from repro.core.ensemble import Ensemble
+from repro.core.selection import DeviceReport, select
+from repro.core.svm import ConstantModel, SVMModel
+from repro.utils.metrics import roc_auc
+
+
+def _random_svm(rng, n=None, d=None) -> SVMModel:
+    n = n or int(rng.integers(4, 60))
+    d = d or int(rng.integers(2, 12))
+    return SVMModel(
+        support_x=rng.normal(size=(n, d)).astype(np.float32),
+        coef=(rng.uniform(-1, 1, n) / n).astype(np.float32),
+        gamma=float(rng.uniform(0.2, 1.5)),
+    )
+
+
+# ----------------------------------------------------------------------
+# wire format + codecs
+# ----------------------------------------------------------------------
+
+def test_fp32_roundtrip_is_lossless(rng):
+    m = _random_svm(rng)
+    dec = decode(encode(m, "fp32"))
+    assert isinstance(dec, SVMModel)
+    np.testing.assert_array_equal(dec.support_x, m.support_x)
+    np.testing.assert_array_equal(dec.coef, m.coef)
+    assert dec.gamma == m.gamma
+
+
+def test_encoded_nbytes_is_exact_len(rng):
+    m = _random_svm(rng)
+    for codec in CODECS:
+        assert encoded_nbytes(m, codec) == len(encode(m, codec))
+
+
+def test_codecs_shrink_payloads(rng):
+    m = _random_svm(rng, n=64, d=16)
+    sizes = {c: encoded_nbytes(m, c) for c in ("fp32", "fp16", "int8", "topk")}
+    assert sizes["fp16"] < sizes["fp32"]
+    assert sizes["int8"] < sizes["fp16"]
+    assert sizes["topk"] < sizes["fp32"]
+
+
+def test_int8_decodes_to_kernel_scored_quantized_model(rng):
+    m = _random_svm(rng, n=40, d=8)
+    q = decode(encode(m, "int8"))
+    assert isinstance(q, QuantizedSVM)
+    x = rng.normal(size=(100, 8)).astype(np.float32)
+    # kernel-scored path == dequantized fp32 path (same math, no copies)
+    np.testing.assert_allclose(q.predict(x), q.dequantize().predict(x), atol=1e-4)
+    # materialize=True hands back a plain SVMModel
+    assert isinstance(decode(encode(m, "int8"), materialize=True), SVMModel)
+    # re-encoding keeps the wire representation bit-exact...
+    q2 = decode(encode(q, "int8"))
+    np.testing.assert_array_equal(q.q, q2.q)
+    np.testing.assert_array_equal(q.scale, q2.scale)
+    # ...and refuses a codec it cannot honour
+    with pytest.raises(ValueError, match="only as int8"):
+        encode(q, "fp32")
+
+
+def test_int8_quantization_error_bounded_per_column(rng):
+    m = _random_svm(rng, n=50, d=6)
+    deq = decode(encode(m, "int8"), materialize=True)
+    span = m.support_x.max(axis=0) - m.support_x.min(axis=0)
+    # affine int8 on [lo, hi] errs at most half a quantization step
+    assert (np.abs(deq.support_x - m.support_x) <= span / 254.0 / 2 + 1e-6).all()
+
+
+def test_topk_keeps_largest_coefs(rng):
+    m = _random_svm(rng, n=40, d=4)
+    dec = decode(encode(m, "topk:0.25"))
+    assert len(dec.coef) == 10
+    kept = set(np.round(dec.coef, 7).tolist())
+    want = set(np.round(m.coef[np.argsort(-np.abs(m.coef))[:10]], 7).tolist())
+    assert kept == want
+
+
+def test_topk_ratio_parses_and_validates():
+    assert get_codec("topk:0.5").param == 0.5
+    assert get_codec("topk").param == 0.25
+    assert get_codec("topk:0.5").spec == "topk:0.5"
+    with pytest.raises(KeyError, match="unknown codec"):
+        get_codec("zstd")
+    with pytest.raises(ValueError, match="takes no parameter"):
+        get_codec("fp16:0.5")
+    with pytest.raises(ValueError, match="ratio"):
+        get_codec("topk:1.5")
+
+
+def test_linear_const_report_roundtrip(rng):
+    lin = LinearSVM(w=rng.normal(size=12).astype(np.float32), b=0.75)
+    dec = decode(encode(lin, "fp32"))
+    np.testing.assert_array_equal(dec.w, lin.w)
+    assert dec.b == lin.b
+    for codec in ("fp16", "int8", "topk:0.5"):
+        d2 = decode(encode(lin, codec))
+        assert isinstance(d2, LinearSVM) and d2.w.shape == lin.w.shape
+    c = decode(encode(ConstantModel(0.3)))
+    assert isinstance(c, ConstantModel) and c.value == 0.3
+    r = DeviceReport(7, 120, 0.625, True)
+    blob = encode(r)
+    assert len(blob) == REPORT_NBYTES == 18
+    rd = decode(blob)
+    assert (rd.device_id, rd.n_train, rd.eligible) == (7, 120, True)
+    assert abs(rd.val_auc - 0.625) < 1e-6
+
+
+def test_ensemble_roundtrip_and_member_sizes(rng):
+    members = [_random_svm(rng) for _ in range(3)]
+    ens = Ensemble(members)
+    blob = encode(ens, "fp16")
+    dec = decode(blob)
+    assert isinstance(dec, Ensemble) and dec.k == 3
+    # ensemble payload = header + count + length-prefixed member blobs
+    member_bytes = sum(len(encode(m, "fp16")) + 4 for m in members)
+    assert len(blob) == 5 + 4 + member_bytes
+
+
+def test_quantized_ensemble_takes_fused_path(rng):
+    """An all-QuantizedSVM ensemble packs once and scores through the
+    fused ensemble_score_q8 path — matching the per-member mean."""
+    from repro.comm import QuantizedStackedEnsemble
+    from repro.core.ensemble import ensemble_predict_mean
+
+    members = [decode(encode(_random_svm(rng, d=6), "int8")) for _ in range(4)]
+    assert all(isinstance(m, QuantizedSVM) for m in members)
+    ens = Ensemble(members)
+    x = rng.normal(size=(150, 6)).astype(np.float32)
+    got = ens.predict(x, chunk=64)
+    np.testing.assert_allclose(got, ensemble_predict_mean(members, x), atol=1e-4)
+    assert isinstance(ens._qstacked, QuantizedStackedEnsemble)  # packed once
+    # supports never left int8
+    assert ens._qstacked.q.dtype == np.int8
+
+
+def test_model_exchange_composes_round(rng):
+    """ModelExchange (the shared protocol/population plumbing): cached
+    uploads, decoded receipts, and cache-composed ensemble sizes."""
+    from repro.comm import ModelExchange
+
+    models = {i: _random_svm(rng) for i in range(4)}
+    reports = [DeviceReport(i, 50, 0.6 + 0.05 * i, True) for i in range(4)]
+    ex = ModelExchange(models, reports, codec="int8")
+    assert ex.upload(2) is ex.upload(2)          # encoded once
+    assert isinstance(ex.received(2), QuantizedSVM)
+    assert ex.pick("cv", 2) == [3, 2]
+    # composed ensemble size == the real encoded ensemble payload
+    ids = [0, 3]
+    want = len(encode(Ensemble([models[i] for i in ids]), "int8"))
+    assert ex.ensemble_nbytes(ids) == want
+    led = CommLedger()
+    ex.record_metadata(led)
+    ex.record_uploads(led, ids, "upload_cv_k2")
+    assert led.total(kind="metadata") == REPORT_NBYTES * 4
+    assert led.total(tag="upload_cv_k2") == sum(len(ex.upload(i)) for i in ids)
+
+
+def test_wire_rejects_garbage(rng):
+    m = _random_svm(rng)
+    blob = encode(m)
+    with pytest.raises(ValueError, match="magic"):
+        decode(b"XX" + blob[2:])
+    with pytest.raises(ValueError, match="version"):
+        decode(blob[:2] + b"\x63" + blob[3:])
+    with pytest.raises(TypeError, match="cannot wire-encode"):
+        encode(object())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_codec_roundtrip_auc_delta_bounded(data_seed):
+    """Property (ISSUE satellite): encode->decode AUC deltas are bounded
+    per codec. Labels are the original model's own median split, so the
+    original scores give AUC 1.0 by construction; the decoded model must
+    stay within the codec's distortion budget of that."""
+    rng = np.random.default_rng(data_seed)
+    m = _random_svm(rng)
+    x = rng.normal(size=(128, m.support_x.shape[1])).astype(np.float32)
+    base = m.predict(x)
+    y = np.where(base > np.median(base), 1.0, -1.0)
+    for codec, floor in (("fp32", 1.0), ("fp16", 0.98), ("int8", 0.95)):
+        auc = roc_auc(y, decode(encode(m, codec)).predict(x))
+        assert auc >= floor, f"{codec}: decoded AUC {auc} below {floor}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from([0.25, 0.5, 0.75]))
+def test_topk_score_error_bounded_by_dropped_mass(data_seed, ratio):
+    """Property: topk's score error is provably at most the dropped
+    |coef| mass (each RBF kernel term lies in (0, 1])."""
+    rng = np.random.default_rng(data_seed)
+    m = _random_svm(rng)
+    x = rng.normal(size=(64, m.support_x.shape[1])).astype(np.float32)
+    dec = decode(encode(m, f"topk:{ratio}"))
+    kept = len(dec.coef)
+    dropped_mass = np.sort(np.abs(m.coef))[: len(m.coef) - kept].sum()
+    err = np.abs(m.predict(x) - dec.predict(x)).max()
+    assert err <= dropped_mass + 1e-5
+
+
+# ----------------------------------------------------------------------
+# ledger
+# ----------------------------------------------------------------------
+
+def test_ledger_totals_and_queries():
+    led = CommLedger()
+    led.record("up", "metadata", 18, device_id=0, tag="metadata_upload")
+    led.record("up", "metadata", 18, device_id=1, tag="metadata_upload")
+    led.record("up", "model_upload", 1000, device_id=1, codec="int8", tag="upload_cv_k1")
+    led.record("down", "student_download", 300, tag="download_distilled")
+    assert len(led) == 4
+    assert led.total() == 1336
+    assert led.total(direction="up") == 1036
+    assert led.total(kind="metadata") == 36
+    assert led.total(tag="upload_cv_k1") == 1000
+    assert led.as_dict() == {
+        "metadata_upload": 36.0, "upload_cv_k1": 1000.0, "download_distilled": 300.0,
+    }
+    s = led.summary()
+    assert s["total_up"] == 1036.0 and s["total_down"] == 300.0
+
+
+def test_ledger_validates_events():
+    led = CommLedger()
+    with pytest.raises(ValueError, match="direction"):
+        led.record("sideways", "metadata", 1)
+    with pytest.raises(ValueError, match="kind"):
+        led.record("up", "gossip", 1)
+    with pytest.raises(ValueError, match="nbytes"):
+        led.record("up", "metadata", -1)
+
+
+# ----------------------------------------------------------------------
+# budgeted selection
+# ----------------------------------------------------------------------
+
+@pytest.fixture
+def budget_reports():
+    return [DeviceReport(i, 10 * (i + 1), 0.55 + 0.03 * i, True) for i in range(8)]
+
+
+def test_budgeted_select_without_budget_matches_strategy(budget_reports):
+    sizes = {i: 100 for i in range(8)}
+    for strat in ("cv", "data", "random"):
+        kw = {"seed": 3} if strat == "random" else {}
+        sel = budgeted_select(strat, budget_reports, 4, sizes, None, **kw)
+        assert sel.ids == select(strat, budget_reports, 4, **kw)
+        assert sel.total_bytes == 400 and sel.budget_bytes is None
+
+
+def test_budgeted_select_respects_budget_and_k(budget_reports):
+    sizes = {i: 100 * (i + 1) for i in range(8)}
+    sel = budgeted_select("cv", budget_reports, 8, sizes, budget_bytes=600)
+    assert sum(sizes[i] for i in sel.ids) <= 600
+    assert sel.total_bytes == sum(sizes[i] for i in sel.ids)
+    assert set(sel.ids) | set(sel.skipped) == set(range(8))
+    # k still caps the pick even under a loose budget
+    sel2 = budgeted_select("cv", budget_reports, 2, sizes, budget_bytes=10**9)
+    assert sel2.k == 2
+
+
+def test_budgeted_select_skips_unaffordable_keeps_rank(budget_reports):
+    # device 7 has the best AUC but is 100x the size of device 6
+    sizes = {i: 100 for i in range(8)}
+    sizes[7] = 10_000
+    sel = budgeted_select("cv", budget_reports, 3, sizes, budget_bytes=350)
+    assert 7 not in sel.ids and 7 in sel.skipped
+    assert sel.ids == [6, 5, 4]  # next-best by the strategy's own rank
+
+
+def test_budgeted_select_slack_budget_is_noop(budget_reports):
+    """A budget that binds nobody must not change the selection — for
+    any strategy, including the seeded random draw."""
+    sizes = {i: 100 for i in range(8)}
+    for strat in ("cv", "data", "random"):
+        for seed in (0, 17):
+            kw = {"seed": seed} if strat == "random" else {}
+            sel = budgeted_select(strat, budget_reports, 4, sizes, 10**9, **kw)
+            assert sel.ids == select(strat, budget_reports, 4, **kw)
+    # and a binding budget still respects the random seed's draw order
+    a = budgeted_select("random", budget_reports, 4, sizes, 250, seed=0)
+    b = budgeted_select("random", budget_reports, 4, sizes, 250, seed=17)
+    assert a.ids != b.ids
+
+
+def test_budgeted_select_ineligible_never_selected():
+    reports = [DeviceReport(0, 50, 0.9, False), DeviceReport(1, 50, 0.6, True)]
+    sel = budgeted_select("cv", reports, 2, {0: 10, 1: 10}, budget_bytes=100)
+    assert sel.ids == [1]
+
+
+# ----------------------------------------------------------------------
+# channel model
+# ----------------------------------------------------------------------
+
+def test_channel_prices_payloads_in_seconds():
+    ch = make_channel(16, seed=0, mean_bandwidth=1000.0, drop_frac=0.25)
+    assert ch.deadline_s == float("inf")
+    t = ch.upload_seconds(3, 5000)
+    assert t == pytest.approx(5000 / ch.bandwidth[3])
+    assert ch.time_to_aggregate({2: 1000, 5: 9000}) == pytest.approx(
+        max(ch.upload_seconds(2, 1000), ch.upload_seconds(5, 9000))
+    )
+    assert ch.time_to_aggregate({}) == 0.0
+
+
+def test_channel_smaller_payloads_rescue_stragglers():
+    ch = make_channel(64, seed=1, nominal_bytes=10_000, straggler_frac=0.25)
+    slow = ch.straggler_mask(10_000)
+    assert 0 < slow.sum() < 64
+    # a 4x smaller (int8-sized) payload strictly shrinks the straggler set
+    faster = ch.straggler_mask(2_500)
+    assert faster.sum() < slow.sum()
+    assert not (faster & ~slow).any()
+
+
+def test_availability_scenario_carries_channel():
+    from repro.sim import make_federation
+
+    fed = make_federation("availability", n_devices=40, seed=1,
+                          mean_samples=60, base="iid", fraction=0.5)
+    assert fed.channel is not None
+    assert 0 < fed.n_available < 40
+    nominal = 60 * 16 * 4
+    # the participation mask is the channel's: drops + deadline misses
+    mask = fed.channel.participation(nominal)
+    assert (fed.available <= mask).all()
+    # iid scenarios stay channel-free
+    assert make_federation("iid", n_devices=8, seed=0).channel is None
+
+
+# ----------------------------------------------------------------------
+# protocol + population integration (ISSUE acceptance criteria)
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_protocol():
+    from repro.core import run_protocol
+    from repro.data import make_dataset
+
+    ds = make_dataset("gleam", seed=0, scale=0.4)
+    return ds, run_protocol(ds, ks=(1, 3), random_trials=2, distill_proxy=40)
+
+
+def test_protocol_accounts_metadata_exchange(tiny_protocol):
+    """Regression (ISSUE satellite): the pre-round DeviceReport exchange
+    is on the ledger — every reporting device, at exact wire size."""
+    ds, res = tiny_protocol
+    assert res.comm_bytes["metadata_upload"] == REPORT_NBYTES * ds.n_devices
+    meta = res.ledger.filter(kind="metadata")
+    assert len(meta) == ds.n_devices
+    assert all(e.nbytes == REPORT_NBYTES and e.direction == "up" for e in meta)
+    assert {e.device_id for e in meta} == set(range(ds.n_devices))
+
+
+def test_protocol_ledger_is_typed_and_consistent(tiny_protocol):
+    _, res = tiny_protocol
+    led = res.ledger
+    # per-tag dict == ledger sums, and the up-total includes metadata
+    assert sum(res.comm_bytes.values()) == led.total()
+    assert led.total(direction="up") == (
+        led.total(kind="metadata") + led.total(kind="model_upload")
+    )
+    assert led.total(direction="down") == (
+        res.comm_bytes["download_distilled"] + res.comm_bytes["download_ensemble"]
+    )
+    # model uploads carry device + codec attribution
+    assert all(
+        e.device_id is not None and e.codec == "fp32"
+        for e in led.filter(kind="model_upload")
+    )
+
+
+def test_protocol_fp32_codec_matches_legacy_numbers(tiny_protocol):
+    """fp32 is lossless: the decoded round reproduces the pre-wire AUCs."""
+    from repro.core import run_protocol
+    from repro.data import make_dataset
+
+    ds, res = tiny_protocol
+    again = run_protocol(ds, ks=(1, 3), random_trials=2)
+    for strat, by_k in again.ensemble_auc.items():
+        for k, auc in by_k.items():
+            assert res.ensemble_auc[strat][k] == pytest.approx(auc, abs=1e-12)
+
+
+def test_protocol_int8_within_1e2_of_fp32_and_budget_exact():
+    """Acceptance: int8 AUC within 1e-2 of fp32 on the iid scenario, and
+    the budgeted ledger total == the sum of encoded payload sizes."""
+    from repro.comm import get_codec
+    from repro.sim import PopulationConfig, run_population
+
+    def run(codec, budget=None):
+        return run_population(PopulationConfig(
+            scenario="iid", n_devices=24, seed=0, mean_samples=80,
+            ks=(5,), strategies=("cv",), codec=codec, budget_bytes=budget,
+        ))
+
+    fp32 = run("fp32")
+    int8 = run("int8")
+    assert abs(fp32.best["cv"] - int8.best["cv"]) < 1e-2
+
+    budget = 12_000
+    rep = run("int8", budget=budget)
+    used = rep.comm["upload_cv_k5"]
+    assert used <= budget
+    uploads = rep.ledger.filter(kind="model_upload")
+    assert used == sum(e.nbytes for e in uploads)
+    assert all(e.codec == get_codec("int8").spec for e in uploads)
+    # the budget bit: fp32 at the same cap affords strictly fewer members
+    rep32 = run("fp32", budget=budget)
+    k32 = len(rep32.ledger.filter(kind="model_upload"))
+    assert len(uploads) > k32
+
+
+def test_fed_run_cli_codec_budget_ledger_exact(tmp_path):
+    """Acceptance: fed_run --mode sim --codec int8 --budget-bytes N runs
+    a budgeted round whose reported totals are exactly the wire sizes of
+    the payloads a deterministic re-run would encode."""
+    from repro.comm import budgeted_select, encode
+    from repro.launch.fed_run import main
+    from repro.sim import make_federation, train_population
+
+    out = tmp_path / "sim.json"
+    budget = 16_384
+    report = main([
+        "--mode", "sim", "--scenario", "iid", "--devices", "16",
+        "--mean-samples", "60", "--k", "4", "--seed", "0",
+        "--codec", "int8", "--budget-bytes", str(budget), "--out", str(out),
+    ])
+    assert report["codec"] == "int8" and report["budget_bytes"] == budget
+    assert out.exists()
+
+    # deterministic re-run: same federation, same training, same pick
+    fed = make_federation("iid", n_devices=16, seed=0, mean_samples=60)
+    pop = train_population(fed.dataset, seed=0, available=fed.available)
+    by_id = {o.device_id: o for o in pop.outcomes}
+    sizes = {r.device_id: len(encode(by_id[r.device_id].model, "int8"))
+             for r in pop.reports if r.eligible}
+    sel = budgeted_select("cv", pop.reports, 4, sizes, budget)
+    want = sum(sizes[i] for i in sel.ids)
+    assert report["comm"]["upload_cv_k4"] == want
+    assert report["comm"]["metadata_upload"] == REPORT_NBYTES * len(pop.reports)
+    upload_total = sum(v for k_, v in report["comm"].items() if k_.startswith("upload_"))
+    assert report["comm"]["total_up"] == upload_total + REPORT_NBYTES * len(pop.reports)
+
+
+def test_population_availability_reports_time_to_aggregate():
+    from repro.sim import PopulationConfig, run_population
+
+    rep = run_population(PopulationConfig(
+        scenario="availability", n_devices=24, seed=0, mean_samples=80,
+        ks=(3,), strategies=("cv",),
+        scenario_params={"base": "iid", "fraction": 0.9},
+    ))
+    assert rep.time_to_aggregate["cv"][3] > 0.0
+    # channel-free scenarios report no latency
+    rep2 = run_population(PopulationConfig(
+        scenario="iid", n_devices=12, seed=0, mean_samples=60,
+        ks=(3,), strategies=("cv",),
+    ))
+    assert rep2.time_to_aggregate == {}
+
+
+# ----------------------------------------------------------------------
+# checkpoint round-trip
+# ----------------------------------------------------------------------
+
+def test_wire_payload_roundtrips_through_checkpoint_manager(rng, tmp_path):
+    from repro.checkpoint import restore_payload, save_payload
+
+    members = [_random_svm(rng) for _ in range(2)]
+    blob = encode(Ensemble(members), "int8")
+    save_payload(str(tmp_path / "ens"), blob, step=1)
+    back = restore_payload(str(tmp_path / "ens"))
+    assert back == blob
+    dec = decode(back)
+    assert dec.k == 2 and isinstance(dec.members[0], QuantizedSVM)

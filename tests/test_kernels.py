@@ -7,8 +7,10 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.batched_gram import batched_rbf_gram_pallas
 from repro.kernels.ensemble_score import ensemble_score_pallas
+from repro.kernels.ensemble_score_q8 import ensemble_score_q8_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rbf_gram import rbf_gram_pallas
+from repro.kernels.rbf_gram_q8 import rbf_gram_q8_pallas
 
 
 @pytest.mark.parametrize("m,n,d", [(32, 32, 8), (50, 70, 16), (128, 128, 32), (200, 130, 4), (1, 300, 64)])
@@ -41,6 +43,40 @@ def test_rbf_gram_properties(key):
     # diagonal ~1 up to catastrophic-cancellation noise in ||x||^2+||y||^2-2xy
     np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-4)
     assert (K >= 0).all() and (K <= 1 + 1e-4).all()
+
+
+@pytest.mark.parametrize(
+    "m,n,d", [(16, 16, 4), (50, 70, 16), (128, 128, 8), (1, 300, 32), (200, 33, 5)]
+)
+@pytest.mark.parametrize("gamma", [0.1, 1.0])
+def test_rbf_gram_q8_sweep(key, m, n, d, gamma):
+    """int8 on-the-fly-dequant Gram kernel vs its oracle, ragged shapes."""
+    rng = np.random.default_rng(m * 1000 + n)
+    x = jax.random.normal(key, (m, d))
+    q = jnp.asarray(rng.integers(-127, 128, size=(n, d)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.005, 0.1, size=d), jnp.float32)
+    zero = jnp.asarray(rng.normal(0, 1, size=d), jnp.float32)
+    out = rbf_gram_q8_pallas(x, q, scale, zero, gamma, block_m=64, block_n=64,
+                             interpret=True)
+    want = ref.rbf_gram_q8_ref(x, q, scale, zero, gamma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+    assert out.shape == (m, n)
+
+
+def test_rbf_gram_q8_matches_fp32_kernel_on_dequantized(key):
+    """q8 kernel == fp32 kernel fed the materialized dequantized supports
+    (the no-fp32-copies claim is a layout change, not a numerics one)."""
+    rng = np.random.default_rng(7)
+    m, n, d = 40, 60, 12
+    x = jax.random.normal(key, (m, d))
+    q = rng.integers(-127, 128, size=(n, d)).astype(np.int8)
+    scale = rng.uniform(0.01, 0.05, size=d).astype(np.float32)
+    zero = rng.normal(0, 1, size=d).astype(np.float32)
+    sup = q.astype(np.float32) * scale[None, :] + zero[None, :]
+    out = rbf_gram_q8_pallas(x, jnp.asarray(q), jnp.asarray(scale),
+                             jnp.asarray(zero), 0.4, interpret=True)
+    want = rbf_gram_pallas(x, jnp.asarray(sup), 0.4, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
 
 
 @pytest.mark.parametrize(
@@ -90,6 +126,48 @@ def test_ensemble_score_sweep(key, b, k, n_max, d):
     want = ref.ensemble_score_ref(x, sup, coef, gammas)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
     assert out.shape == (b,)
+
+
+@pytest.mark.parametrize(
+    "b,k,n_max,d", [(7, 1, 5, 3), (64, 4, 100, 16), (33, 3, 130, 8), (1, 6, 80, 24)]
+)
+def test_ensemble_score_q8_sweep(key, b, k, n_max, d):
+    """Fused int8 serve kernel vs oracle, ragged zero-padded supports."""
+    rng = np.random.default_rng(b * 100 + k)
+    x = jax.random.normal(key, (b, d))
+    q = jnp.asarray(rng.integers(-127, 128, size=(k, n_max, d)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.005, 0.05, size=(k, d)), jnp.float32)
+    zero = jnp.asarray(rng.normal(0, 1, size=(k, d)), jnp.float32)
+    coef = jnp.asarray(rng.normal(size=(k, n_max)) / n_max, jnp.float32)
+    gammas = jnp.asarray(rng.uniform(0.1, 1.0, size=k), jnp.float32)
+    # ragged members: zero the per-member coef tails as the packer does
+    lengths = rng.integers(1, n_max + 1, size=k)
+    coef = coef * (np.arange(n_max)[None, :] < lengths[:, None])
+    out = ensemble_score_q8_pallas(x, q, scale, zero, coef, gammas,
+                                   block_b=64, block_n=64, interpret=True)
+    want = ref.ensemble_score_q8_ref(x, q, scale, zero, coef, gammas)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+    assert out.shape == (b,)
+
+
+def test_ensemble_score_q8_matches_fp32_kernel_on_dequantized(key):
+    """q8 ensemble kernel == fp32 ensemble kernel fed the materialized
+    dequantized supports (layout change, not a numerics change)."""
+    rng = np.random.default_rng(3)
+    b, k, n_max, d = 40, 3, 50, 8
+    x = jax.random.normal(key, (b, d))
+    q = rng.integers(-127, 128, size=(k, n_max, d)).astype(np.int8)
+    scale = rng.uniform(0.01, 0.04, size=(k, d)).astype(np.float32)
+    zero = rng.normal(0, 1, size=(k, d)).astype(np.float32)
+    coef = (rng.normal(size=(k, n_max)) / n_max).astype(np.float32)
+    gammas = rng.uniform(0.2, 1.0, size=k).astype(np.float32)
+    sup = q.astype(np.float32) * scale[:, None, :] + zero[:, None, :]
+    out = ensemble_score_q8_pallas(x, jnp.asarray(q), jnp.asarray(scale),
+                                   jnp.asarray(zero), jnp.asarray(coef),
+                                   jnp.asarray(gammas), interpret=True)
+    want = ensemble_score_pallas(x, jnp.asarray(sup), jnp.asarray(coef),
+                                 jnp.asarray(gammas), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
 
 
 def test_ensemble_score_matches_explicit_mean(key):
