@@ -1,0 +1,97 @@
+"""Distillation solver benchmark: dense vs blocked-CG vs Nystrom.
+
+Wall-clock and student AUC at l in {100, 1k, 10k} proxy points (the
+regimes of ``DistillConfig.solver="auto"``). All three solvers fit the
+SAME kernel-ridge system (shared proxy, gamma, relative ridge), so AUC
+deltas are solver approximation error only:
+
+  * dense materializes the (l, l) Gram and LU-solves — O(l^2) memory,
+    O(l^3) time; the oracle, and the thing that stops scaling first;
+  * cg streams tiled Gram blocks through the ``gram_matvec`` kernel —
+    O(l*d) memory, Gram FLOPs re-paid per iteration (the TPU-shaped
+    trade; on this CPU container the oracle path is row-chunked);
+  * nystrom solves in an m-landmark subspace — O(l*m) work AND an
+    m-support student (smaller downloads for free).
+
+``smoke`` mode (CI) runs the small sizes only.
+
+Usage: PYTHONPATH=src:. python benchmarks/distill_bench.py [smoke]
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.ensemble import Ensemble
+from repro.core.svm import default_gamma, train_svm
+from repro.distill import DistillConfig, distill_teacher
+from repro.utils.metrics import roc_auc
+
+from benchmarks.common import csv_row
+
+FULL_SIZES = (100, 1_000, 10_000)
+SMOKE_SIZES = (128, 384)
+DIM = 16
+TEACHER_MEMBERS = 6
+TEST_N = 2_000
+
+
+def _blobs(rng, n: int, d: int = DIM):
+    y = np.where(rng.random(n) < 0.5, 1.0, -1.0)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32) + 1.8 * y[:, None] / np.sqrt(d)
+    return x.astype(np.float32), y.astype(np.float32)
+
+
+def _teacher():
+    members = [
+        train_svm(*_blobs(np.random.default_rng(i), 120), lam=0.02)
+        for i in range(TEACHER_MEMBERS)
+    ]
+    return Ensemble(members)
+
+
+def _solver_cfgs(l: int):
+    yield "dense", DistillConfig(solver="dense")
+    # at the big sizes CG runs at benchmark tolerance — the AUC column
+    # shows what that buys; small sizes converge below it anyway
+    yield "cg", DistillConfig(solver="cg", tol=1e-4, maxiter=100)
+    yield "nystrom", DistillConfig(solver="nystrom", landmarks=min(512, l))
+
+
+def run(smoke: bool = False):
+    ls = SMOKE_SIZES if smoke else FULL_SIZES
+    rng = np.random.default_rng(0)
+    ens = _teacher()
+    xt, yt = _blobs(rng, TEST_N)
+    ens_auc = roc_auc(yt, ens.predict(xt))
+    rows = [csv_row("distill_bench.teacher_auc", f"{ens_auc:.4f}",
+                    f"k={TEACHER_MEMBERS} ensemble")]
+
+    for l in ls:
+        proxy = _blobs(np.random.default_rng(1000 + l), l)[0]
+        gamma = default_gamma(proxy)  # shared: every solver, same system
+        dense_s = None
+        for name, cfg in _solver_cfgs(l):
+            t0 = time.perf_counter()
+            student = distill_teacher(ens.predict, proxy, gamma, cfg, seed=0)
+            seconds = time.perf_counter() - t0
+            auc = roc_auc(yt, student.predict(xt))
+            if name == "dense":
+                dense_s = seconds
+            speedup = f"speedup_vs_dense={dense_s / seconds:.1f}x" if dense_s else ""
+            rows.append(csv_row(
+                f"distill_bench.l{l}.{name}.seconds", f"{seconds:.2f}",
+                f"auc={auc:.4f} gap={ens_auc - auc:+.4f} "
+                f"n_support={len(student.coef)} {speedup}".strip(),
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    from benchmarks.common import assert_not_interpret
+
+    assert_not_interpret()
+    print("\n".join(run(smoke="smoke" in sys.argv[1:])))

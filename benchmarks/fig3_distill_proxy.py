@@ -1,15 +1,23 @@
 """Figure 3: distilled model vs ensemble as proxy data grows (avg of
 trials). The distilled model should approach the ensemble with
-relatively few proxy samples."""
+relatively few proxy samples.
+
+Devices train through the public device-parallel ``train_population``
+engine (the 27-154x bucketed path from ``repro.sim``), and the whole
+(trial x proxy-size) sweep is ONE batched ``distill_sweep`` jit call —
+each trial draws a single max-size proxy whose prefixes serve the
+smaller l values.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Ensemble, distill_svm, run_protocol
-from repro.core.protocol import _mean_auc_over_devices, _train_device
+from repro.core import Ensemble
+from repro.core.protocol import _mean_auc_over_devices
 from repro.core.selection import select
-from repro.core.svm import default_gamma
 from repro.data import make_dataset
+from repro.distill import dedupe_proxy, distill_sweep
+from repro.sim.engine import train_population
 
 from benchmarks.common import SCALES, csv_row
 
@@ -17,29 +25,36 @@ PROXY_SIZES = (10, 25, 50, 100, 200)
 TRIALS = 3
 
 
+def _mean_auc(devices, scores_fn) -> float:
+    return _mean_auc_over_devices(devices, scores_fn)[0]
+
+
 def run(dataset: str = "gleam"):
     ds = make_dataset(dataset, seed=0, scale=SCALES[dataset])
-    devices = [
-        _train_device(i, dev, ds.min_samples, 0.01, 0) for i, dev in enumerate(ds.devices)
-    ]
-    reports = [d.report for d in devices]
+    pop = train_population(ds, lam=0.01, seed=0)
+    devices = pop.outcomes
+    reports = pop.reports
     by_id = {d.device_id: d for d in devices}
     k = min(10, sum(r.eligible for r in reports))
     ids = select("cv", reports, k)
     ens = Ensemble([by_id[i].model for i in ids])
-    ens_auc, _ = _mean_auc_over_devices(devices, ens.predict)
+    ens_auc = _mean_auc(devices, ens.predict)
     rows = [csv_row(f"fig3.{dataset}.ensemble", f"{ens_auc:.4f}", f"cv k={k} teacher")]
-    val_x = np.concatenate([d.splits["val"].x for d in devices])
-    for l in PROXY_SIZES:
-        if l > len(val_x):
-            continue
-        aucs = []
-        for t in range(TRIALS):
-            rng = np.random.default_rng(100 + t)
-            proxy = val_x[rng.choice(len(val_x), l, replace=False)]
-            student = distill_svm(ens.predict, proxy, gamma=default_gamma(proxy))
-            auc, _ = _mean_auc_over_devices(devices, student.predict)
-            aucs.append(auc)
+
+    # dedupe the pool up front: sweep prefixes are positional, so the
+    # batched solve needs distinct rows (see distill_sweep's contract)
+    val_x = dedupe_proxy(np.concatenate([d.splits["val"].x for d in devices]))
+    ls = tuple(l for l in PROXY_SIZES if l <= len(val_x))
+    if not ls:
+        return rows
+    l_max = max(ls)
+    proxies = np.stack([
+        val_x[np.random.default_rng(100 + t).choice(len(val_x), l_max, replace=False)]
+        for t in range(TRIALS)
+    ])
+    students = distill_sweep(ens.predict, proxies, ls)  # one batched solve
+    for i, l in enumerate(ls):
+        aucs = [_mean_auc(devices, students[t][i].predict) for t in range(TRIALS)]
         rows.append(csv_row(
             f"fig3.{dataset}.distilled_l{l}", f"{np.mean(aucs):.4f}",
             f"gap_to_ensemble={ens_auc - np.mean(aucs):+.4f} ({TRIALS} trials)",

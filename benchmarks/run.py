@@ -22,6 +22,7 @@ def main() -> None:
         ablation_distill_loss,
         comm_bench,
         comm_cost,
+        distill_bench,
         fig1_mean_auc,
         fig2_score_distribution,
         fig3_distill_proxy,
@@ -39,6 +40,7 @@ def main() -> None:
         ("fig3", fig3_distill_proxy.run),
         ("comm", comm_cost.run),
         ("comm_bench", comm_bench.run),
+        ("distill_bench", distill_bench.run),
         ("kernels", kernel_bench.run),
         ("serve", serve_bench.run),
         ("sim", sim_bench.run),

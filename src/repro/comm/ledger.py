@@ -114,4 +114,8 @@ class CommLedger:
         out["total_up"] = float(self.total(direction="up"))
         out["total_down"] = float(self.total(direction="down"))
         out["total_metadata"] = float(self.total(kind="metadata"))
+        # the distilled-student downlink (repro.distill) — kept as its
+        # own roll-up so bytes-vs-AUC frontiers can price the compact
+        # student against the full ensemble download directly
+        out["total_student_down"] = float(self.total(kind="student_download"))
         return out

@@ -158,6 +158,10 @@ class QuantizedStackedEnsemble:
     coef: np.ndarray    # (k, n_max) fp32, zero on padding
     gammas: np.ndarray  # (k,)
 
+    @property
+    def k(self) -> int:
+        return self.q.shape[0]
+
     @classmethod
     def from_members(cls, members: Sequence["QuantizedSVM"]) -> "QuantizedStackedEnsemble":
         if not members:

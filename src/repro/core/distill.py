@@ -3,11 +3,18 @@
 SVM path (paper-faithful): given unlabeled proxy points x'_1..x'_l and
 teacher soft labels F_k(x'_i), fit a student kernel expansion
     min_{alpha'} (1/l) sum_i (F(x'_i) - sum_j alpha'_j k(x'_j, x'_i))^2
-which is exactly kernel (ridge) regression on the soft labels. We add a
-tiny ridge eps*I for conditioning (the paper's pure least-squares is
-recovered as eps -> 0). The distilled model needs only the PROXY points
+which is exactly kernel (ridge) regression on the soft labels. A small
+ridge — RELATIVE to trace(K)/l, so it is scale-free — conditions the
+solve (the paper's pure least-squares is recovered as eps -> 0), and
+exact duplicate proxy rows are dropped first: each duplicate pair makes
+the ridge-free Gram singular, and overlapping device validation pools
+produce them routinely. The distilled model needs only the PROXY points
 — device support vectors never leave the server: the paper's privacy
 argument.
+
+``distill_svm`` keeps the paper-level API; the scalable solvers
+(blocked CG streaming tiled Gram blocks, Nystrom landmarks), the proxy
+registry, and the batched multi-l sweep live in ``repro.distill``.
 
 Transformer path (the paper's "easily extended to non-convex models"):
 the student trains on proxy tokens against the ensemble's mean
@@ -16,13 +23,13 @@ KL (Hinton-style); both are provided and ablated in the benchmarks.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.svm import SVMModel, rbf_gram
+from repro.core.svm import SVMModel
 
 
 def distill_svm(
@@ -30,16 +37,18 @@ def distill_svm(
     proxy_x: np.ndarray,
     gamma: float,
     eps: float = 1e-6,
+    solver: str = "dense",
 ) -> SVMModel:
-    """Distill any teacher (ensemble) into a single kernel expansion."""
-    soft = jnp.asarray(teacher_predict(proxy_x), jnp.float32)  # F_k(x')
-    xp = jnp.asarray(proxy_x, jnp.float32)
-    K = rbf_gram(xp, xp, gamma)  # (l, l)
-    alpha = jnp.linalg.solve(K + eps * jnp.eye(K.shape[0]), soft)
-    return SVMModel(
-        support_x=np.asarray(proxy_x, np.float32),
-        coef=np.asarray(alpha, np.float32),
-        gamma=gamma,
+    """Distill any teacher (ensemble) into a single kernel expansion.
+
+    Thin wrapper over ``repro.distill.distill_teacher`` with the dense
+    small-l oracle as the default solver; ``eps`` is relative to
+    trace(K)/l (== 1 for RBF Gram matrices)."""
+    from repro.distill import DistillConfig, distill_teacher
+
+    return distill_teacher(
+        teacher_predict, proxy_x, gamma=gamma,
+        cfg=DistillConfig(solver=solver, eps=eps),
     )
 
 

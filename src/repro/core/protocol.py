@@ -8,7 +8,12 @@ Simulates the full round on a federated dataset:
   4. the server selects k models per strategy (cv / data / random) and
      receives them — the SINGLE round of communication;
   5. ensembles are evaluated on every device's test split (mean AUC);
-  6. optionally, the server distills the best ensemble on proxy data.
+  6. optionally, the server distills the best ensemble on proxy data
+     via ``repro.distill`` (``distill=DistillConfig(...)`` selects the
+     solver, proxy source, proxy size, and an independent student
+     download codec; ``distill_proxy=l`` remains as shorthand). The
+     proxy draw runs on its own SeedSequence-derived stream, so it is
+     reproducible regardless of ``ideal_cap`` or pooled-data size.
 
 Communication is accounted on a ``repro.comm`` ledger: every protocol
 message — each device's pre-round ``DeviceReport`` (18 wire bytes),
@@ -42,9 +47,8 @@ from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
 
 import numpy as np
 
-from repro.core.svm import train_svm, default_gamma
+from repro.core.svm import train_svm
 from repro.core.ensemble import Ensemble
-from repro.core.distill import distill_svm
 from repro.data.federated import FederatedDataset, DeviceData
 from repro.data.partition import pool_devices
 from repro.utils.metrics import roc_auc
@@ -52,6 +56,7 @@ from repro.utils.logging import get_logger
 
 if TYPE_CHECKING:  # runtime import would cycle: comm.budget <- core.selection
     from repro.comm import CommLedger
+    from repro.distill import DistillConfig
 
 log = get_logger("protocol")
 
@@ -68,6 +73,10 @@ class ProtocolResult:
     per_device: Dict[str, np.ndarray]
     ledger: Optional["CommLedger"] = None
     codec: str = "fp32"
+    # the distilled student AS DEVICES RECEIVE IT (decoded from its
+    # download wire form) — drop it straight into serve.EnsembleScorer
+    student: Optional[object] = None
+    student_codec: Optional[str] = None
 
     def relative_gain_over_local(self) -> float:
         b = max(self.best.values())
@@ -110,10 +119,19 @@ def run_protocol(
     engine: str = "bucketed",
     codec: str = "fp32",
     budget_bytes: Optional[int] = None,
+    distill: Optional["DistillConfig"] = None,
 ) -> ProtocolResult:
     # deferred: repro.comm pulls core.selection back in at import time
-    from repro.comm import CommLedger, ModelExchange, decode, encode
+    from repro.comm import CommLedger, ModelExchange
+    from repro.distill import DistillConfig
     from repro.sim.engine import train_population
+
+    # ``distill=`` is the full config; the legacy ``distill_proxy=l``
+    # shorthand maps onto it (and fills in a config without a size)
+    if distill is None:
+        distill = DistillConfig(proxy_size=distill_proxy)
+    elif distill.proxy_size == 0 and distill_proxy > 0:
+        distill = dataclasses.replace(distill, proxy_size=distill_proxy)
 
     m = dataset.n_devices
     devices = train_population(dataset, lam=lam, seed=seed, mode=engine).outcomes
@@ -182,22 +200,26 @@ def run_protocol(
         "ideal": ideal_aucs,
         "full_ensemble": full_aucs,
     }
-    # --- optional distillation of the best ensemble ---
-    if distill_proxy > 0:
+    # --- optional distillation of the best ensemble (repro.distill) ---
+    student_recv = None
+    student_codec = None
+    if distill.proxy_size > 0 and best:
+        from repro.distill import distill_round
+
         best_strat = max(best, key=best.get)
         best_k = max(ensemble_auc[best_strat], key=ensemble_auc[best_strat].get)
         ids = ex.pick(best_strat, best_k, seed)
         ens = Ensemble([ex.received(i) for i in ids])
-        proxy = _proxy_from_validation(devices, distill_proxy, rng)
-        gamma = default_gamma(proxy)
-        student = distill_svm(ens.predict, proxy, gamma)
-        # the student is downloaded through the same codec — evaluate
-        # what devices decode, so its AUC and its bytes match up
-        student_wire = encode(student, codec_spec)
-        dist_auc, dist_aucs = _mean_auc_over_devices(devices, decode(student_wire).predict)
+        # the distillation leg (proxy draw on its OWN SeedSequence
+        # stream — independent of the ideal-subsample rng above —
+        # solve, wire through the student codec, ledger) is shared with
+        # run_population; devices decode ``dr.student``, so its AUC and
+        # its bytes match up
+        dr = distill_round(ens.predict, devices, distill, seed, codec_spec,
+                           ledger, dim=dataset.dim)
+        student_recv, student_codec = dr.student, dr.codec
+        dist_auc, dist_aucs = _mean_auc_over_devices(devices, student_recv.predict)
         per_device["distilled"] = dist_aucs
-        ledger.record("down", "student_download", len(student_wire),
-                      codec=codec_spec, tag="download_distilled")
         ledger.record("down", "ensemble_download", ex.ensemble_nbytes(ids),
                       codec=codec_spec, tag="download_ensemble")
         ensemble_auc.setdefault("distilled", {})[best_k] = dist_auc
@@ -213,13 +235,6 @@ def run_protocol(
         per_device=per_device,
         ledger=ledger,
         codec=codec_spec,
+        student=student_recv,
+        student_codec=student_codec,
     )
-
-
-def _proxy_from_validation(devices: Sequence["DeviceOutcome"], n: int, rng) -> np.ndarray:
-    """Paper protocol: proxy data sampled from validation data across
-    devices (unlabeled — only features are used)."""
-    xs = np.concatenate([d.splits["val"].x for d in devices])
-    if len(xs) > n:
-        xs = xs[rng.choice(len(xs), n, replace=False)]
-    return xs

@@ -1,0 +1,64 @@
+"""repro.distill — scalable server-side knowledge aggregation.
+
+The paper's second pillar (Sec. 3, Eq. 3): distill the device ensemble
+into ONE compact global model on unlabeled proxy data, so device
+support vectors never leave the server. This package makes that stage
+a population-scale subsystem:
+
+solvers.py  kernel-ridge solver registry — dense oracle, blocked CG
+            whose matvec streams tiled Gram blocks (``gram_matvec``
+            Pallas kernel; the (l, l) Gram never materializes in HBM),
+            and a Nystrom landmark solver for l >> 10^3 whose student
+            shrinks to m landmarks.
+proxy.py    proxy-data registry — named, seedable sources (pooled
+            validation / public pool / Gaussian-mixture synthetic /
+            per-scenario samplers), mirroring ``sim/scenarios.py``.
+sweep.py    batched multi-l distillation: the whole fig-3 proxy sweep
+            as one doubly-vmapped jit call.
+config.py   ``DistillConfig`` — the knob object that rides through
+            ``run_protocol(distill=...)``, ``PopulationConfig.distill``
+            and ``fed_run --distill-*``.
+
+Integration: the distilled student is wire-encoded through its own
+codec (default: the round's upload codec), recorded on the
+``CommLedger`` at exact wire size, evaluated on its DECODED form, and
+servable through ``repro.serve.EnsembleScorer``.
+"""
+from repro.distill.config import DistillConfig
+from repro.distill.proxy import (
+    PROXIES,
+    ProxyContext,
+    list_proxies,
+    make_proxy,
+    register_proxy,
+)
+from repro.distill.round import DistilledRound, distill_round
+from repro.distill.solvers import (
+    SOLVERS,
+    dedupe_proxy,
+    distill_rng,
+    distill_teacher,
+    get_solver,
+    list_solvers,
+    register_solver,
+)
+from repro.distill.sweep import distill_sweep
+
+__all__ = [
+    "DistillConfig",
+    "DistilledRound",
+    "PROXIES",
+    "ProxyContext",
+    "SOLVERS",
+    "dedupe_proxy",
+    "distill_rng",
+    "distill_round",
+    "distill_sweep",
+    "distill_teacher",
+    "get_solver",
+    "list_proxies",
+    "list_solvers",
+    "make_proxy",
+    "register_proxy",
+    "register_solver",
+]

@@ -1,0 +1,166 @@
+"""Proxy-data registry: named, seedable sources of unlabeled features.
+
+The paper distills on "unlabeled proxy data" without committing to
+where it comes from; where it comes from decides the distilled model's
+quality and privacy posture, so — mirroring ``sim/scenarios.py`` — the
+proxy source is a first-class, sweepable axis. A source is a
+registered function from a ``ProxyContext`` to an ``(n, d)`` feature
+array; all randomness flows from the context's generator (which the
+protocol derives from its own distillation SeedSequence stream, so the
+draw is independent of every other consumer of the run seed).
+
+Registered sources:
+
+  validation  pooled device validation features (the paper's protocol)
+  public      server-held public pool: a seeded held-out subsample of
+              pooled device TRAIN features — stands in for a public
+              unlabeled corpus from the population distribution
+  gaussian    Gaussian-mixture synthetic: one component per device
+              (mean = the device's validation-feature mean, shared
+              diagonal covariance from the pooled features) — the
+              server needs only first/second moments, never raw rows
+  scenario    per-scenario sampler: redraw fresh unlabeled features
+              from a registered ``repro.sim`` scenario generator with
+              a derived seed (params: scenario, n_devices,
+              mean_samples, dim + the scenario's own params)
+
+Register new sources with ``@register_proxy("name")`` — the protocol,
+the population runner, and ``fed_run --proxy-source`` resolve them by
+name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ProxyContext:
+    """Everything a proxy source may draw on."""
+
+    n: int                                  # requested proxy size
+    rng: np.random.Generator                # the distillation stream
+    devices: Optional[Sequence] = None      # DeviceOutcomes (sim/protocol)
+    dim: Optional[int] = None               # feature dim, if no devices
+    params: Mapping = dataclasses.field(default_factory=dict)
+
+    def param(self, key: str, default):
+        return self.params.get(key, default)
+
+
+ProxyFn = Callable[[ProxyContext], np.ndarray]
+PROXIES: Dict[str, ProxyFn] = {}
+
+
+def register_proxy(name: str) -> Callable[[ProxyFn], ProxyFn]:
+    def deco(fn: ProxyFn) -> ProxyFn:
+        if name in PROXIES:
+            raise ValueError(f"proxy source {name!r} already registered")
+        PROXIES[name] = fn
+        return fn
+    return deco
+
+
+def list_proxies() -> Dict[str, str]:
+    """name -> first docstring line, for --help style listings."""
+    return {
+        name: ((fn.__doc__ or "").strip().splitlines() or ["(undocumented)"])[0]
+        for name, fn in sorted(PROXIES.items())
+    }
+
+
+def make_proxy(
+    name: str,
+    *,
+    n: int,
+    rng: np.random.Generator,
+    devices: Optional[Sequence] = None,
+    dim: Optional[int] = None,
+    **params,
+) -> np.ndarray:
+    if name not in PROXIES:
+        raise KeyError(f"unknown proxy source {name!r}; options {sorted(PROXIES)}")
+    ctx = ProxyContext(n=n, rng=rng, devices=devices, dim=dim, params=params)
+    out = np.asarray(PROXIES[name](ctx), np.float32)
+    if out.ndim != 2:
+        raise ValueError(f"proxy source {name!r} returned shape {out.shape}")
+    return out
+
+
+def _subsample(xs: np.ndarray, n: int, rng: np.random.Generator) -> np.ndarray:
+    if len(xs) > n:
+        xs = xs[rng.choice(len(xs), n, replace=False)]
+    return xs
+
+
+def _pooled(devices: Sequence, split: str) -> np.ndarray:
+    if not devices:
+        raise ValueError("proxy source needs device outcomes")
+    return np.concatenate([d.splits[split].x for d in devices])
+
+
+# ----------------------------------------------------------------------
+# registered sources
+# ----------------------------------------------------------------------
+
+@register_proxy("validation")
+def validation_pool(ctx: ProxyContext) -> np.ndarray:
+    """Paper protocol: unlabeled features pooled from device validation
+    splits (only features are used — labels never leave devices)."""
+    return _subsample(_pooled(ctx.devices, "val"), ctx.n, ctx.rng)
+
+
+@register_proxy("public")
+def public_pool(ctx: ProxyContext) -> np.ndarray:
+    """Server-held public pool: seeded subsample of pooled train
+    features — a stand-in for a public unlabeled corpus drawn from the
+    same population distribution."""
+    return _subsample(_pooled(ctx.devices, "train"), ctx.n, ctx.rng)
+
+
+@register_proxy("gaussian")
+def gaussian_mixture(ctx: ProxyContext) -> np.ndarray:
+    """Gaussian-mixture synthetic proxy: one component per device (mean
+    = device validation-feature mean) with a shared diagonal covariance
+    from the pooled validation features; the server needs only moments,
+    never raw device rows."""
+    if not ctx.devices:
+        raise ValueError("gaussian proxy needs device outcomes")
+    means = np.stack([
+        d.splits["val"].x.mean(axis=0) for d in ctx.devices if d.splits["val"].n > 0
+    ])
+    pooled = _pooled(ctx.devices, "val")
+    std = pooled.std(axis=0) + 1e-6
+    comp = ctx.rng.integers(0, len(means), size=ctx.n)
+    noise = ctx.rng.normal(0.0, 1.0, size=(ctx.n, pooled.shape[1]))
+    return (means[comp] + std[None, :] * noise).astype(np.float32)
+
+
+@register_proxy("scenario")
+def scenario_resample(ctx: ProxyContext) -> np.ndarray:
+    """Per-scenario sampler: redraw fresh unlabeled features from a
+    registered sim scenario's generative process under a derived seed
+    (params: scenario, plus the scenario's own params)."""
+    from repro.sim.scenarios import make_federation  # deferred: sim <-> distill
+
+    name = str(ctx.param("scenario", ""))
+    if not name:
+        raise ValueError("scenario proxy needs params['scenario']")
+    passthrough = {
+        k: v for k, v in ctx.params.items()
+        if k not in ("scenario", "n_devices", "mean_samples", "dim")
+    }
+    mean_samples = int(ctx.param("mean_samples", 80))
+    n_devices = int(ctx.param("n_devices", max(-(-ctx.n // mean_samples), 2)))
+    fed = make_federation(
+        name,
+        n_devices=n_devices,
+        seed=int(ctx.rng.integers(0, 2**31 - 1)),
+        mean_samples=mean_samples,
+        dim=int(ctx.param("dim", ctx.dim or 16)),
+        **passthrough,
+    )
+    xs = np.concatenate([dev.x for dev in fed.dataset.devices])
+    return _subsample(xs, ctx.n, ctx.rng)

@@ -1,0 +1,242 @@
+"""Kernel-ridge solvers for server-side distillation (Eq. 3 at scale).
+
+The distillation objective is kernel ridge regression on the teacher's
+soft labels over l unlabeled proxy points:
+
+    min_alpha (1/l) ||K alpha - soft||^2 + eps' alpha^T K alpha,
+    K_ij = exp(-gamma ||x'_i - x'_j||^2),  eps' = eps * trace(K)/l
+
+Three solvers trade exactness for scale, registered by name (mirroring
+the scenario registry) and picked by ``DistillConfig.solver``:
+
+  dense    materialize K, one LU solve — the small-l oracle every other
+           solver is tested against.
+  cg       blocked conjugate gradient: the matvec streams tiled
+           ``rbf_gram`` blocks through ``kernels.ops.gram_matvec``
+           (Pallas kernel on TPU, row-chunked oracle elsewhere), so the
+           (l, l) Gram never materializes in HBM — O(l·d) memory,
+           re-computed Gram FLOPs per iteration.
+  nystrom  landmark solver for l >> 10^3: the student is a kernel
+           expansion over m << l seeded landmarks Z, fitted by the
+           normal equations (Kxz^T Kxz + l·eps·Kzz) beta = Kxz^T soft.
+           Peak memory O(l·m); the student itself shrinks to m support
+           points — smaller downloads for free.
+  auto     dense for l <= dense_max, nystrom for l >= nystrom_min,
+           cg in between.
+
+``distill_teacher`` is the shared entry: it dedupes proxy rows (exact
+duplicates make the ridge-free system singular — overlapping device
+validation pools produce them), derives gamma, queries the teacher
+once, and dispatches the solver. All solvers return an ``SVMModel``
+whose support set is server-side proxy data only — device support
+vectors never leave the server (the paper's privacy argument).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.svm import SVMModel, default_gamma
+from repro.distill.config import DistillConfig
+
+# seeded landmark / proxy draws derive their streams from this tag so
+# distillation randomness never aliases the protocol's other consumers;
+# each distillation-internal consumer gets its own sub-stream key
+DISTILL_STREAM = 0xD157
+_PROXY_KEY = 0
+_LANDMARK_KEY = 1
+
+
+def distill_rng(seed: int) -> np.random.Generator:
+    """The proxy draw's own SeedSequence-derived stream — independent
+    of how many draws other protocol stages (ideal-model subsampling,
+    eval subsetting) consumed before it."""
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, DISTILL_STREAM, _PROXY_KEY])
+    )
+
+
+def _landmark_rng(seed: int) -> np.random.Generator:
+    """Nystrom landmark stream — keyed separately from the proxy draw
+    so the two distillation-internal draws never replay the same bits."""
+    return np.random.default_rng(
+        np.random.SeedSequence([seed, DISTILL_STREAM, _LANDMARK_KEY])
+    )
+
+
+SolverFn = Callable[..., SVMModel]
+SOLVERS: Dict[str, SolverFn] = {}
+
+
+def register_solver(name: str) -> Callable[[SolverFn], SolverFn]:
+    def deco(fn: SolverFn) -> SolverFn:
+        if name in SOLVERS:
+            raise ValueError(f"solver {name!r} already registered")
+        SOLVERS[name] = fn
+        return fn
+    return deco
+
+
+def get_solver(name: str) -> SolverFn:
+    if name not in SOLVERS:
+        raise KeyError(f"unknown distill solver {name!r}; options {sorted(SOLVERS)}")
+    return SOLVERS[name]
+
+
+def list_solvers() -> Dict[str, str]:
+    """name -> first docstring line, for --help style listings."""
+    return {
+        name: ((fn.__doc__ or "").strip().splitlines() or ["(undocumented)"])[0]
+        for name, fn in sorted(SOLVERS.items())
+    }
+
+
+# ----------------------------------------------------------------------
+# dense oracle
+# ----------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _dense_alpha(xp, soft, gamma, eps):
+    from repro.kernels import ops as kops
+
+    K = kops.rbf_gram(xp, xp, gamma)  # (l, l)
+    l = K.shape[0]
+    ridge = eps * jnp.trace(K) / l  # scale-free: eps relative to mean diag
+    return jnp.linalg.solve(K + ridge * jnp.eye(l, dtype=K.dtype), soft)
+
+
+@register_solver("dense")
+def dense_solve(soft, xp, gamma: float, cfg: DistillConfig, seed: int = 0) -> SVMModel:
+    """Materialized-Gram LU solve — the small-l oracle."""
+    alpha = _dense_alpha(jnp.asarray(xp, jnp.float32),
+                         jnp.asarray(soft, jnp.float32), float(gamma), cfg.eps)
+    return SVMModel(support_x=np.asarray(xp, np.float32),
+                    coef=np.asarray(alpha, np.float32), gamma=float(gamma))
+
+
+# ----------------------------------------------------------------------
+# blocked conjugate gradient (streaming Gram matvec)
+# ----------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("gamma", "maxiter"))
+def _cg_alpha(xp, soft, gamma, eps, tol, maxiter):
+    """CG on (K + eps'I) alpha = soft; the matvec streams Gram tiles
+    (``gram_matvec``) so K never materializes. RBF diag is exp(0)=1, so
+    trace(K)/l == 1 and the relative ridge is just ``eps``."""
+    from repro.kernels import ops as kops
+
+    def mv(v):
+        return kops.gram_matvec(xp, xp, v, gamma) + eps * v
+
+    b = soft.astype(jnp.float32)
+    bnorm2 = jnp.dot(b, b)
+    stop2 = (tol * tol) * jnp.maximum(bnorm2, 1e-30)
+
+    def cond(state):
+        k, _, _, _, rs = state
+        return (k < maxiter) & (rs > stop2)
+
+    def body(state):
+        k, x, r, p, rs = state
+        Ap = mv(p)
+        a = rs / jnp.maximum(jnp.dot(p, Ap), 1e-30)
+        x = x + a * p
+        r = r - a * Ap
+        rs_new = jnp.dot(r, r)
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        return (k + 1, x, r, p, rs_new)
+
+    state = (jnp.int32(0), jnp.zeros_like(b), b, b, bnorm2)
+    _, x, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return x
+
+
+@register_solver("cg")
+def cg_solve(soft, xp, gamma: float, cfg: DistillConfig, seed: int = 0) -> SVMModel:
+    """Blocked CG — streams tiled Gram blocks, O(l*d) memory."""
+    alpha = _cg_alpha(jnp.asarray(xp, jnp.float32), jnp.asarray(soft, jnp.float32),
+                      float(gamma), cfg.eps, cfg.tol, cfg.maxiter)
+    return SVMModel(support_x=np.asarray(xp, np.float32),
+                    coef=np.asarray(alpha, np.float32), gamma=float(gamma))
+
+
+# ----------------------------------------------------------------------
+# Nystrom landmark solver
+# ----------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _nystrom_beta(xp, soft, z, gamma, eps):
+    from repro.kernels import ops as kops
+
+    Kxz = kops.rbf_gram(xp, z, gamma)  # (l, m) — tall-thin, never (l, l)
+    Kzz = kops.rbf_gram(z, z, gamma)   # (m, m)
+    l, m = Kxz.shape
+    A = Kxz.T @ Kxz
+    # l*eps*Kzz is the RKHS ridge; the trace jitter guards duplicate or
+    # near-duplicate landmark draws
+    reg = l * eps * Kzz + (1e-7 * jnp.trace(A) / m) * jnp.eye(m, dtype=A.dtype)
+    return jnp.linalg.solve(A + reg, Kxz.T @ soft)
+
+
+@register_solver("nystrom")
+def nystrom_solve(soft, xp, gamma: float, cfg: DistillConfig, seed: int = 0) -> SVMModel:
+    """Landmark solver for l >> 10^3; student support = m landmarks."""
+    l = len(xp)
+    m = min(cfg.landmarks, l)
+    idx = _landmark_rng(seed).choice(l, m, replace=False)
+    z = np.asarray(xp, np.float32)[np.sort(idx)]
+    beta = _nystrom_beta(jnp.asarray(xp, jnp.float32),
+                         jnp.asarray(soft, jnp.float32),
+                         jnp.asarray(z), float(gamma), cfg.eps)
+    return SVMModel(support_x=z, coef=np.asarray(beta, np.float32), gamma=float(gamma))
+
+
+@register_solver("auto")
+def auto_solve(soft, xp, gamma: float, cfg: DistillConfig, seed: int = 0) -> SVMModel:
+    """Size-based dispatch: dense <= dense_max < cg < nystrom_min <= nystrom."""
+    l = len(xp)
+    if l <= cfg.dense_max:
+        return dense_solve(soft, xp, gamma, cfg, seed)
+    if l < cfg.nystrom_min:
+        return cg_solve(soft, xp, gamma, cfg, seed)
+    return nystrom_solve(soft, xp, gamma, cfg, seed)
+
+
+# ----------------------------------------------------------------------
+# shared entry
+# ----------------------------------------------------------------------
+
+def dedupe_proxy(proxy_x: np.ndarray) -> np.ndarray:
+    """Drop exact duplicate proxy rows (sorted-unique order).
+
+    Overlapping device validation pools make duplicates likely; each
+    duplicate pair makes the ridge-free Gram exactly singular, and at
+    eps ~ 1e-6 the solve is numerically singular in float32. Dropping
+    duplicates changes nothing about the fitted function (the objective
+    only sees distinct points, each once)."""
+    return np.unique(np.asarray(proxy_x, np.float32), axis=0)
+
+
+def distill_teacher(
+    teacher_predict: Callable[[np.ndarray], np.ndarray],
+    proxy_x: np.ndarray,
+    gamma: Optional[float] = None,
+    cfg: DistillConfig = DistillConfig(),
+    seed: int = 0,
+) -> SVMModel:
+    """Distill any teacher into a single kernel expansion on proxy data.
+
+    Dedupes the proxy, derives gamma (sklearn 'scale' heuristic) when
+    not given, queries the teacher ONCE for soft labels, and dispatches
+    the configured solver. The returned student's support set is proxy
+    data only.
+    """
+    xp = dedupe_proxy(proxy_x)
+    if gamma is None:
+        gamma = default_gamma(xp)
+    soft = np.asarray(teacher_predict(xp), np.float32)
+    return get_solver(cfg.solver)(soft, xp, gamma, cfg, seed)

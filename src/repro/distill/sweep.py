@@ -1,0 +1,96 @@
+"""Batched multi-l distillation — the fig-3 proxy sweep in one jit call.
+
+The fig-3 experiment asks "how does the distilled model approach its
+teacher as proxy size l grows?", which naively re-runs the whole
+distillation T x len(ls) times. Here the sweep is one batched solve:
+
+  * every trial draws ONE proxy of l_max rows; smaller l are nested
+    prefixes of that draw (each prefix is itself a uniform subsample,
+    since the draw is a random subset in random order);
+  * one ``batched_rbf_gram`` call builds all T trial Grams at l_max
+    (Pallas kernel on TPU, vmap'd oracle elsewhere);
+  * each (trial, l) cell solves the MASKED system — rows/cols >= l are
+    replaced by identity so the solve's support is exactly the prefix —
+    under a doubly-vmapped ``jnp.linalg.solve``.
+
+The teacher is queried once per trial (at l_max); gamma is per-trial
+(the full draw's scale heuristic), shared across that trial's prefixes
+so a single Gram serves every l.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.svm import SVMModel, default_gamma
+
+
+@partial(jax.jit, static_argnames=("ls",))
+def _sweep_alphas(proxies, soft, gammas, ls, eps):
+    """proxies: (T, l_max, d); soft: (T, l_max); gammas: (T,).
+    Returns (T, len(ls), l_max) dual coefficients, zero outside each
+    prefix."""
+    from repro.kernels import ops as kops
+
+    K = kops.batched_rbf_gram(proxies, proxies, gammas)  # (T, l_max, l_max)
+    l_max = K.shape[1]
+    masks = (jnp.arange(l_max)[None, :] < jnp.asarray(ls)[:, None]).astype(
+        K.dtype
+    )  # (L, l_max)
+
+    def solve_cell(Kt, st, mask):
+        # masked system: prefix block of K, identity elsewhere; RBF diag
+        # is 1 so trace(K_masked)/l == 1 and the relative ridge is eps
+        Km = Kt * (mask[:, None] * mask[None, :])
+        Km = Km + jnp.diag(jnp.where(mask > 0, eps, 1.0))
+        return jnp.linalg.solve(Km, st * mask)
+
+    per_trial = jax.vmap(solve_cell, in_axes=(None, None, 0))  # over ls
+    return jax.vmap(per_trial, in_axes=(0, 0, None))(K, soft, masks)
+
+
+def distill_sweep(
+    teacher_predict: Callable[[np.ndarray], np.ndarray],
+    proxies: np.ndarray,
+    ls: Sequence[int],
+    gammas: Optional[np.ndarray] = None,
+    eps: float = 1e-6,
+) -> List[List[SVMModel]]:
+    """Distill a teacher at every (trial, proxy-size) cell at once.
+
+    proxies: (T, l_max, d) — one max-size draw per trial; ls: proxy
+    sizes, each <= l_max (smaller sizes use the draw's prefix). Returns
+    ``students[t][i]`` = the student distilled from ``proxies[t, :ls[i]]``.
+
+    Rows within a trial must be distinct: prefixes are positional, so
+    the masked solve cannot dedupe the way ``distill_teacher`` does —
+    draw each trial without replacement from a deduplicated pool (e.g.
+    ``np.unique(pool, axis=0)``) to stay on the single-solve path's
+    numerics.
+    """
+    proxies = np.asarray(proxies, np.float32)
+    T, l_max, _ = proxies.shape
+    ls = tuple(int(l) for l in ls)
+    if any(l < 1 or l > l_max for l in ls):
+        raise ValueError(f"every l in {ls} must be in [1, {l_max}]")
+    if gammas is None:
+        gammas = np.array([default_gamma(p) for p in proxies], np.float32)
+    soft = np.stack([
+        np.asarray(teacher_predict(p), np.float32) for p in proxies
+    ])  # teacher queried once per trial, at l_max
+    alphas = np.asarray(_sweep_alphas(
+        jnp.asarray(proxies), jnp.asarray(soft),
+        jnp.asarray(gammas, jnp.float32), ls, float(eps),
+    ))
+    return [
+        [
+            SVMModel(support_x=proxies[t, :l], coef=alphas[t, i, :l],
+                     gamma=float(gammas[t]))
+            for i, l in enumerate(ls)
+        ]
+        for t in range(T)
+    ]

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.gram_matvec import gram_matvec_pallas
 from repro.kernels.rbf_gram import rbf_gram_pallas
 from repro.kernels.rbf_gram_q8 import rbf_gram_q8_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -48,6 +49,31 @@ def rbf_gram(x1, x2, gamma: float):
     if _force_interpret():
         return rbf_gram_pallas(x1, x2, gamma, interpret=True)
     return _rbf_ref(x1, x2, gamma)
+
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _gmv_tpu(x1, x2, v, gamma):
+    return gram_matvec_pallas(x1, x2, v, gamma)
+
+
+@partial(jax.jit, static_argnames=("gamma",))
+def _gmv_ref(x1, x2, v, gamma):
+    return ref.gram_matvec_ref(x1, x2, v, gamma)
+
+
+def gram_matvec(x1, x2, v, gamma: float):
+    """Streaming ``K(x1, x2; gamma) @ v`` (the distill CG hot path).
+
+    x1: (m, d); x2: (n, d); v: (n,). Returns (m,) fp32. Neither path
+    materializes the full (m, n) Gram: the Pallas kernel reduces each
+    VMEM tile immediately, and the CPU oracle is row-chunked.
+    """
+    gamma = float(gamma)
+    if _on_tpu():
+        return _gmv_tpu(x1, x2, v, gamma)
+    if _force_interpret():
+        return gram_matvec_pallas(x1, x2, v, gamma, interpret=True)
+    return _gmv_ref(x1, x2, v, gamma)
 
 
 @partial(jax.jit, static_argnames=("gamma",))

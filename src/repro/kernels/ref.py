@@ -29,6 +29,26 @@ def batched_rbf_gram_ref(x1, x2, gammas):
     )
 
 
+def gram_matvec_ref(x1, x2, v, gamma: float, row_chunk: int = 1024):
+    """``K(x1, x2; gamma) @ v`` (oracle for gram_matvec) — row-chunked so
+    the full (m, n) Gram never materializes on the CPU path either; the
+    peak live tile is (row_chunk, n).
+
+    x1: (m, d); x2: (n, d); v: (n,). Returns (m,).
+    """
+    m, d = x1.shape
+    chunk = min(row_chunk, max(m, 1))
+    mp = -(-m // chunk) * chunk
+    x1p = jnp.pad(x1.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    x2 = x2.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    out = jax.lax.map(
+        lambda c: rbf_gram_ref(c, x2, gamma) @ v,
+        x1p.reshape(mp // chunk, chunk, d),
+    )
+    return out.reshape(-1)[:m]
+
+
 def rbf_gram_q8_ref(x, q, scale, zero, gamma: float):
     """Gram between fp32 queries and int8 affine-quantized supports
     (oracle for rbf_gram_q8): dequantize, then the fp32 Gram.

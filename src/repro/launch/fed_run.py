@@ -22,7 +22,10 @@ report selection/ensembling quality.
 Sim-mode uploads go through the ``repro.comm`` wire (``--codec fp32 |
 fp16 | int8 | topk[:ratio]``) with an optional per-selection byte cap
 (``--budget-bytes``); the report includes the ledger's exact per-tag
-byte totals.
+byte totals. ``--distill-proxy N`` distills the best selected ensemble
+through ``repro.distill`` (``--distill-solver dense|cg|nystrom|auto``,
+``--proxy-source validation|public|gaussian|scenario``,
+``--student-codec`` for an independent download codec).
 """
 from __future__ import annotations
 
@@ -54,6 +57,16 @@ def run_sim(args) -> dict:
     params = dict(kv.split("=", 1) for kv in args.scenario_param)
     params = {k: float(v) if v.replace(".", "", 1).isdigit() else v
               for k, v in params.items()}
+    distill = None
+    if args.distill_proxy > 0:
+        from repro.distill import DistillConfig
+
+        distill = DistillConfig(
+            proxy_size=args.distill_proxy,
+            solver=args.distill_solver,
+            proxy=args.proxy_source,
+            codec=args.student_codec,
+        )
     cfg = PopulationConfig(
         scenario=args.scenario,
         n_devices=args.devices,
@@ -64,6 +77,7 @@ def run_sim(args) -> dict:
         scenario_params=params,
         codec=args.codec,
         budget_bytes=args.budget_bytes,
+        distill=distill,
     )
 
     def progress(u):
@@ -88,6 +102,10 @@ def run_sim(args) -> dict:
         "budget_bytes": report.budget_bytes,
         "comm": report.comm,
     }
+    if report.student is not None:
+        out["student_codec"] = report.student_codec
+        out["distill_solver"] = args.distill_solver
+        out["proxy_source"] = args.proxy_source
     if report.time_to_aggregate:
         out["time_to_aggregate"] = {
             s: dict(v) for s, v in report.time_to_aggregate.items()
@@ -117,6 +135,18 @@ def main(argv=None):
     ap.add_argument("--budget-bytes", type=int, default=None,
                     help="sim mode: upload byte budget per selection "
                          "(strategy-rank greedy knapsack over encoded sizes)")
+    ap.add_argument("--distill-proxy", type=int, default=0,
+                    help="sim mode: distill the best ensemble on this "
+                         "many proxy points (0 disables)")
+    ap.add_argument("--distill-solver", default="auto",
+                    help="sim mode: distill solver "
+                         "(dense | cg | nystrom | auto)")
+    ap.add_argument("--proxy-source", default="validation",
+                    help="sim mode: proxy registry source "
+                         "(validation | public | gaussian | scenario)")
+    ap.add_argument("--student-codec", default=None,
+                    help="sim mode: student download codec "
+                         "(default: the round's --codec)")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=30)

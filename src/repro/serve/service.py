@@ -14,20 +14,43 @@ from typing import Union
 import numpy as np
 
 from repro.core.ensemble import Ensemble, StackedEnsemble
+from repro.core.svm import SVMModel
 from repro.serve.scheduler import MicroBatchScheduler, ServeConfig
 
 
-class EnsembleScorer:
-    """score_fn adapter over a packed ensemble.
+def _pack(ensemble):
+    """Normalize any servable model form to a packed stacked ensemble."""
+    from repro.comm.wire import QuantizedStackedEnsemble, QuantizedSVM
 
-    Accepts an ``Ensemble`` (packed here, once) or an already-packed
-    ``StackedEnsemble``. Instances are callable with a (b, d) batch and
-    return (b,) fp32 mean member scores, which is exactly the
-    ``MicroBatchScheduler`` score_fn contract.
+    if isinstance(ensemble, (StackedEnsemble, QuantizedStackedEnsemble)):
+        return ensemble
+    if isinstance(ensemble, SVMModel):
+        return StackedEnsemble.from_members([ensemble])
+    if isinstance(ensemble, QuantizedSVM):
+        return QuantizedStackedEnsemble.from_members([ensemble])
+    if isinstance(ensemble, Ensemble):
+        if ensemble.members and all(
+            isinstance(m, QuantizedSVM) for m in ensemble.members
+        ):
+            return QuantizedStackedEnsemble.from_members(ensemble.members)
+        return ensemble.stacked()
+    raise TypeError(f"cannot serve {type(ensemble).__name__}")
+
+
+class EnsembleScorer:
+    """score_fn adapter over a packed ensemble (or single student).
+
+    Accepts an ``Ensemble`` (packed here, once), an already-packed
+    ``StackedEnsemble``/``QuantizedStackedEnsemble``, or a single model
+    — an ``SVMModel`` or int8-wire ``QuantizedSVM``, e.g. the distilled
+    student off ``ProtocolResult.student`` — which serves as a k=1
+    ensemble through the same fused kernels. Instances are callable
+    with a (b, d) batch and return (b,) fp32 mean member scores, which
+    is exactly the ``MicroBatchScheduler`` score_fn contract.
     """
 
-    def __init__(self, ensemble: Union[Ensemble, StackedEnsemble]):
-        self.stacked = ensemble.stacked() if isinstance(ensemble, Ensemble) else ensemble
+    def __init__(self, ensemble: Union[Ensemble, StackedEnsemble, "SVMModel", "QuantizedSVM"]):
+        self.stacked = _pack(ensemble)
 
     @property
     def k(self) -> int:

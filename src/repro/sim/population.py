@@ -7,6 +7,10 @@ whole population through the device-parallel engine (streaming progress
 via ``on_update``), runs the paper's selection strategies on the cheap
 scalar reports, and evaluates the selected ensembles on a seeded,
 capped subsample of device test splits via the fused serve path.
+``PopulationConfig.distill`` plugs in ``repro.distill``: the best
+selected ensemble is distilled into one compact student (solver +
+proxy source per the config), downloaded through its own wire codec
+onto the ledger, and reported under ``ensemble_auc["distilled"]``.
 
     from repro.sim import PopulationConfig, run_population
     report = run_population(PopulationConfig(
@@ -21,6 +25,7 @@ import numpy as np
 
 from repro.comm import CommLedger, ModelExchange
 from repro.core.ensemble import Ensemble
+from repro.distill import DistillConfig, distill_round
 from repro.sim.engine import GroupUpdate, train_population
 from repro.sim.scenarios import Federation, make_federation
 from repro.utils.metrics import roc_auc
@@ -49,6 +54,8 @@ class PopulationConfig:
     # communication (repro.comm)
     codec: str = "fp32"             # wire codec for model uploads
     budget_bytes: Optional[int] = None  # per-selection upload byte cap
+    # server-side distillation (repro.distill); None disables
+    distill: Optional[DistillConfig] = None
 
 
 @dataclasses.dataclass
@@ -70,10 +77,19 @@ class PopulationReport:
     # populated only when the federation carries a ChannelModel
     time_to_aggregate: Dict[str, Dict[int, float]] = dataclasses.field(default_factory=dict)
     ledger: Optional[CommLedger] = None
+    # the distilled student as devices decode it (serve it directly via
+    # repro.serve.EnsembleScorer), and its download codec
+    student: Optional[object] = None
+    student_codec: Optional[str] = None
 
     @property
     def best(self) -> Dict[str, float]:
-        return {s: max(v.values()) for s, v in self.ensemble_auc.items() if v}
+        """Best AUC per SELECTION strategy — the distilled student is
+        reported under ``ensemble_auc["distilled"]`` but is not a
+        strategy, and (matching ``ProtocolResult.best``) never shadows
+        the strategies here."""
+        return {s: max(v.values()) for s, v in self.ensemble_auc.items()
+                if v and s != "distilled"}
 
 
 def run_population(
@@ -147,6 +163,35 @@ def run_population(
                 )
         log.info("%s/%s: %s", ds.name, strat, ensemble_auc[strat])
 
+    # --- server-side distillation of the best selected ensemble (the
+    # leg itself — proxy stream, solve, wire, ledger — is the shared
+    # ``distill_round``; devices decode the student it returns) ---
+    student = None
+    student_codec = None
+    best_cells = {
+        (s, k): auc for s, v in ensemble_auc.items() for k, auc in v.items()
+    }
+    if cfg.distill is not None and cfg.distill.proxy_size > 0 and best_cells:
+        best_strat, best_k = max(best_cells, key=best_cells.get)
+        ids = ex.pick(best_strat, best_k, cfg.seed)
+        ens = Ensemble([ex.received(i) for i in ids])
+        defaults = {}
+        if cfg.distill.proxy == "scenario":
+            # default the sampler to THIS federation's generating process
+            defaults = {"scenario": cfg.scenario,
+                        "mean_samples": cfg.mean_samples,
+                        **dict(cfg.scenario_params)}
+        dr = distill_round(ens.predict, outcomes, cfg.distill, cfg.seed,
+                           ex.codec, ledger, dim=cfg.dim,
+                           default_proxy_params=defaults)
+        student, student_codec = dr.student, dr.codec
+        ensemble_auc["distilled"] = {
+            best_k: mean_auc(student.predict(eval_x, chunk=cfg.eval_chunk))
+        }
+        log.info("%s/distilled (solver=%s, proxy=%s, codec=%s): %s",
+                 ds.name, cfg.distill.solver, cfg.distill.proxy,
+                 student_codec, ensemble_auc["distilled"])
+
     return PopulationReport(
         scenario=cfg.scenario,
         n_devices=ds.n_devices,
@@ -165,4 +210,6 @@ def run_population(
             time_to_aggregate if federation.channel is not None else {}
         ),
         ledger=ledger,
+        student=student,
+        student_codec=student_codec,
     )

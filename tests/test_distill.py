@@ -1,0 +1,300 @@
+"""repro.distill: solver equivalence (CG/Nystrom vs dense oracle),
+proxy registry, batched multi-l sweep, distill-path bugfix regressions
+(determinism vs ideal_cap, duplicate proxy rows), and the end-to-end
+distill-everywhere acceptance (ledger wire sizes, student serving)."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import Ensemble, distill_svm, run_protocol
+from repro.core.svm import default_gamma, train_svm
+from repro.data import make_dataset
+from repro.distill import (
+    DistillConfig,
+    dedupe_proxy,
+    distill_rng,
+    distill_sweep,
+    distill_teacher,
+    get_solver,
+    list_proxies,
+    list_solvers,
+    make_proxy,
+)
+from repro.utils.metrics import roc_auc
+
+
+def _blobs(rng, n, d=6, sep=1.8):
+    y = np.where(rng.random(n) < 0.5, 1.0, -1.0)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32) + sep * y[:, None] / np.sqrt(d)
+    return x.astype(np.float32), y.astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def teacher():
+    members = [
+        train_svm(*_blobs(np.random.default_rng(i), 90), lam=0.02) for i in range(5)
+    ]
+    return Ensemble(members)
+
+
+# ----------------------------------------------------------------------
+# solvers vs the dense oracle
+# ----------------------------------------------------------------------
+
+def test_cg_matches_dense_oracle(teacher, rng):
+    proxy = _blobs(rng, 200)[0]
+    gamma = default_gamma(proxy)
+    dense = distill_teacher(teacher.predict, proxy, gamma, DistillConfig(solver="dense"))
+    cg = distill_teacher(teacher.predict, proxy, gamma,
+                         DistillConfig(solver="cg", tol=1e-7, maxiter=2000))
+    xt, yt = _blobs(rng, 400)
+    np.testing.assert_allclose(cg.predict(xt), dense.predict(xt), atol=1e-3)
+    assert abs(roc_auc(yt, cg.predict(xt)) - roc_auc(yt, dense.predict(xt))) < 1e-3
+
+
+def test_nystrom_all_landmarks_matches_dense(teacher, rng):
+    """With m == l the Nystrom subspace is the full span — same fit."""
+    proxy = _blobs(rng, 120)[0]
+    gamma = default_gamma(proxy)
+    dense = distill_teacher(teacher.predict, proxy, gamma, DistillConfig(solver="dense"))
+    nys = distill_teacher(teacher.predict, proxy, gamma,
+                          DistillConfig(solver="nystrom", landmarks=120))
+    xt, yt = _blobs(rng, 400)
+    assert abs(roc_auc(yt, nys.predict(xt)) - roc_auc(yt, dense.predict(xt))) < 1e-3
+
+
+def test_nystrom_compact_student_close_auc(teacher, rng):
+    proxy = _blobs(rng, 400)[0]
+    gamma = default_gamma(proxy)
+    dense = distill_teacher(teacher.predict, proxy, gamma, DistillConfig(solver="dense"))
+    nys = distill_teacher(teacher.predict, proxy, gamma,
+                          DistillConfig(solver="nystrom", landmarks=64))
+    assert len(nys.coef) == 64  # the student shrank to the landmarks
+    xt, yt = _blobs(rng, 400)
+    assert roc_auc(yt, nys.predict(xt)) > roc_auc(yt, dense.predict(xt)) - 0.02
+
+
+def test_nystrom_landmarks_seeded(teacher, rng):
+    proxy = _blobs(rng, 150)[0]
+    cfg = DistillConfig(solver="nystrom", landmarks=40)
+    a = distill_teacher(teacher.predict, proxy, 0.5, cfg, seed=3)
+    b = distill_teacher(teacher.predict, proxy, 0.5, cfg, seed=3)
+    np.testing.assert_array_equal(a.support_x, b.support_x)
+    np.testing.assert_array_equal(a.coef, b.coef)
+
+
+def test_auto_solver_dispatch(teacher, rng):
+    proxy = _blobs(rng, 50)[0]
+    cfg = DistillConfig(solver="auto", dense_max=10, nystrom_min=10_000,
+                        landmarks=16, tol=1e-6, maxiter=500)
+    # l=50 > dense_max -> cg branch; support stays the full proxy
+    s = distill_teacher(teacher.predict, proxy, 0.5, cfg)
+    assert len(s.coef) == len(dedupe_proxy(proxy))
+    cfg2 = DistillConfig(solver="auto", dense_max=10, nystrom_min=20, landmarks=16)
+    s2 = distill_teacher(teacher.predict, proxy, 0.5, cfg2)
+    assert len(s2.coef) == 16  # nystrom branch
+
+
+def test_solver_registry():
+    assert set(list_solvers()) >= {"dense", "cg", "nystrom", "auto"}
+    with pytest.raises(KeyError, match="unknown distill solver"):
+        get_solver("lu-decomposition-by-vibes")
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), l=st.integers(20, 80), gamma=st.floats(0.05, 2.0))
+def test_cg_dense_equivalence_property(seed, l, gamma):
+    """CG at tight tolerance solves the same system as the dense LU."""
+    r = np.random.default_rng(seed)
+    proxy = _blobs(r, l)[0]
+    teacher = train_svm(*_blobs(np.random.default_rng(seed + 1), 60), lam=0.02)
+    dense = distill_teacher(teacher.predict, proxy, gamma, DistillConfig(solver="dense"))
+    cg = distill_teacher(teacher.predict, proxy, gamma,
+                         DistillConfig(solver="cg", tol=1e-8, maxiter=4000))
+    xq = _blobs(r, 64)[0]
+    np.testing.assert_allclose(cg.predict(xq), dense.predict(xq), atol=2e-3)
+
+
+# ----------------------------------------------------------------------
+# duplicate-proxy regression (the eps=1e-6 singularity bugfix)
+# ----------------------------------------------------------------------
+
+def test_duplicate_proxy_rows_regression(teacher, rng):
+    """Exact duplicate proxy rows (overlapping validation pools) made
+    the absolutely-ridged solve numerically singular; dedupe + relative
+    ridge keeps the student identical to the clean-proxy one."""
+    proxy = _blobs(rng, 100)[0]
+    dup = np.concatenate([proxy, proxy[:40], proxy[:7]])
+    gamma = default_gamma(proxy)
+    clean = distill_svm(teacher.predict, proxy, gamma)
+    dirty = distill_svm(teacher.predict, dup, gamma)
+    assert np.isfinite(dirty.coef).all()
+    assert len(dirty.coef) == len(np.unique(proxy, axis=0))
+    xt = _blobs(rng, 300)[0]
+    np.testing.assert_allclose(dirty.predict(xt), clean.predict(xt), atol=1e-4)
+
+
+def test_dedupe_proxy():
+    x = np.array([[1, 2], [1, 2], [3, 4.0]], np.float32)
+    out = dedupe_proxy(x)
+    assert out.shape == (2, 2)
+
+
+# ----------------------------------------------------------------------
+# proxy registry
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def outcomes():
+    from repro.sim.engine import train_population
+
+    ds = make_dataset("gleam", seed=0, scale=0.3)
+    return train_population(ds, lam=0.01, seed=0).outcomes
+
+
+@pytest.mark.parametrize("source", ["validation", "public", "gaussian"])
+def test_proxy_sources_seeded(outcomes, source):
+    d = outcomes[0].splits["val"].x.shape[1]
+    a = make_proxy(source, n=40, rng=np.random.default_rng(7), devices=outcomes)
+    b = make_proxy(source, n=40, rng=np.random.default_rng(7), devices=outcomes)
+    assert a.shape == (40, d) and a.dtype == np.float32
+    np.testing.assert_array_equal(a, b)  # same stream -> same draw
+    c = make_proxy(source, n=40, rng=np.random.default_rng(8), devices=outcomes)
+    assert not np.array_equal(a, c)
+
+
+def test_proxy_scenario_source():
+    x = make_proxy("scenario", n=64, rng=np.random.default_rng(0), dim=8,
+                   scenario="dirichlet", alpha=0.5)
+    assert x.shape == (64, 8)
+
+
+def test_proxy_registry_listing_and_unknown(outcomes):
+    assert set(list_proxies()) >= {"validation", "public", "gaussian", "scenario"}
+    with pytest.raises(KeyError, match="unknown proxy source"):
+        make_proxy("telepathy", n=4, rng=np.random.default_rng(0), devices=outcomes)
+
+
+def test_distill_rng_independent_streams():
+    a = distill_rng(0).integers(0, 2**31, 4)
+    b = distill_rng(0).integers(0, 2**31, 4)
+    c = distill_rng(1).integers(0, 2**31, 4)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    # and it is NOT the raw run-seed stream other stages consume
+    assert not np.array_equal(a, np.random.default_rng(0).integers(0, 2**31, 4))
+
+
+# ----------------------------------------------------------------------
+# batched multi-l sweep
+# ----------------------------------------------------------------------
+
+def test_distill_sweep_matches_single_solves(teacher, rng):
+    """Every (trial, l) cell of the batched sweep equals the one-at-a-
+    time dense solve on that prefix (same gamma, same ridge)."""
+    proxies = np.stack([_blobs(np.random.default_rng(40 + t), 60)[0] for t in range(2)])
+    ls = (10, 35, 60)
+    students = distill_sweep(teacher.predict, proxies, ls)
+    xq = _blobs(rng, 128)[0]
+    for t in range(2):
+        gamma = default_gamma(proxies[t])
+        for i, l in enumerate(ls):
+            single = distill_teacher(teacher.predict, proxies[t, :l], gamma,
+                                     DistillConfig(solver="dense"))
+            np.testing.assert_allclose(
+                students[t][i].predict(xq), single.predict(xq), atol=2e-3
+            )
+
+
+def test_distill_sweep_validates_ls(teacher):
+    proxies = np.zeros((1, 16, 4), np.float32)
+    with pytest.raises(ValueError, match="must be in"):
+        distill_sweep(teacher.predict, proxies, (32,))
+
+
+# ----------------------------------------------------------------------
+# protocol + population integration (distill everywhere)
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gleam_ds():
+    return make_dataset("gleam", seed=0, scale=0.3)
+
+
+def test_protocol_distill_seed_independent_of_ideal_cap(gleam_ds):
+    """Regression: the proxy draw used to consume the same rng as the
+    ideal-model subsample, so the distilled result silently changed
+    with ideal_cap. Same seed must now give the same student."""
+    kw = dict(ks=(1, 5), random_trials=1, distill_proxy=60)
+    r1 = run_protocol(gleam_ds, ideal_cap=2_000, **kw)
+    r2 = run_protocol(gleam_ds, ideal_cap=37, **kw)
+    np.testing.assert_array_equal(r1.per_device["distilled"], r2.per_device["distilled"])
+    np.testing.assert_array_equal(r1.student.support_x, r2.student.support_x)
+
+
+def test_protocol_distill_e2e_acceptance(gleam_ds):
+    """run_protocol(distill=...): the student rides the ledger at exact
+    wire size, decodes to a kernel-scored model, serves through
+    EnsembleScorer, and lands within tolerance of its teacher."""
+    from repro.comm import encode
+    from repro.serve import EnsembleScorer
+
+    res = run_protocol(
+        gleam_ds, ks=(1, 5), random_trials=1,
+        distill=DistillConfig(proxy_size=80, solver="cg", proxy="validation",
+                              codec="int8", tol=1e-6, maxiter=1000),
+    )
+    # ledger carries download_distilled at the student's exact wire size
+    events = res.ledger.filter(kind="student_download")
+    assert len(events) == 1
+    assert events[0].nbytes == len(encode(res.student, "int8"))  # bit-exact re-emit
+    assert events[0].codec == "int8" and res.student_codec == "int8"
+    assert res.comm_bytes["download_distilled"] == events[0].nbytes
+    # the decoded student is the int8 wire form and it scores
+    assert type(res.student).__name__ == "QuantizedSVM"
+    scorer = EnsembleScorer(res.student)
+    batch = gleam_ds.devices[0].x[:16].astype(np.float32)
+    scores = scorer(batch)
+    assert scores.shape == (16,) and np.isfinite(scores).all()
+    assert scorer.k == 1
+    # distilled AUC within tolerance of the teacher ensemble
+    dist_auc = list(res.ensemble_auc["distilled"].values())[0]
+    assert dist_auc > max(res.best.values()) - 0.05
+
+
+def test_population_distill_and_serve():
+    from repro.serve import EnsembleScorer
+    from repro.sim import PopulationConfig, run_population
+
+    rep = run_population(PopulationConfig(
+        scenario="iid", n_devices=24, ks=(6,), seed=1,
+        distill=DistillConfig(proxy_size=60, solver="dense", proxy="public"),
+    ))
+    assert "distilled" in rep.ensemble_auc
+    dist_auc = list(rep.ensemble_auc["distilled"].values())[0]
+    assert dist_auc > max(v for s, d in rep.ensemble_auc.items() if s != "distilled"
+                          for v in d.values()) - 0.05
+    assert rep.comm["download_distilled"] > 0
+    assert rep.comm["total_student_down"] == rep.comm["download_distilled"]
+    scorer = EnsembleScorer(rep.student)
+    assert np.isfinite(scorer(np.zeros((4, 16), np.float32))).all()
+
+
+def test_population_distill_student_codec_independent():
+    from repro.sim import PopulationConfig, run_population
+
+    rep = run_population(PopulationConfig(
+        scenario="iid", n_devices=16, ks=(4,), seed=2, codec="fp32",
+        distill=DistillConfig(proxy_size=40, solver="dense", codec="fp16"),
+    ))
+    assert rep.codec == "fp32" and rep.student_codec == "fp16"
+
+
+def test_fed_run_cli_distill(tmp_path):
+    from repro.launch.fed_run import main
+
+    out = main(["--mode", "sim", "--scenario", "iid", "--devices", "12",
+                "--k", "4", "--distill-proxy", "30", "--distill-solver", "auto",
+                "--proxy-source", "validation"])
+    assert "distilled" in out["ensemble_auc"]
+    assert out["comm"]["download_distilled"] > 0

@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.batched_gram import batched_rbf_gram_pallas
 from repro.kernels.ensemble_score import ensemble_score_pallas
+from repro.kernels.gram_matvec import gram_matvec_pallas
 from repro.kernels.ensemble_score_q8 import ensemble_score_q8_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rbf_gram import rbf_gram_pallas
@@ -23,6 +24,37 @@ def test_rbf_gram_shapes(key, m, n, d, gamma):
     want = ref.rbf_gram_ref(x1, x2, gamma)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
     assert out.shape == (m, n)
+
+
+@pytest.mark.parametrize(
+    "m,n,d", [(32, 32, 8), (50, 70, 16), (128, 128, 32), (200, 130, 4), (1, 300, 64)]
+)
+@pytest.mark.parametrize("gamma", [0.1, 1.0])
+def test_gram_matvec_sweep(key, m, n, d, gamma):
+    """Streaming Gram matvec (distill CG hot path) vs dense-Gram matvec,
+    ragged shapes: tiling + padded-v annihilation must be exact."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    x1 = jax.random.normal(k1, (m, d))
+    x2 = jax.random.normal(k2, (n, d))
+    v = jax.random.normal(k3, (n,))
+    out = gram_matvec_pallas(x1, x2, v, gamma, block_m=64, block_n=64, interpret=True)
+    want = ref.rbf_gram_ref(x1, x2, gamma) @ v
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+    assert out.shape == (m,)
+
+
+def test_gram_matvec_ref_chunking_invariant(key):
+    """The row-chunked CPU oracle is chunk-size independent (it never
+    materializes the full Gram; chunking must not change numerics)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    x1 = jax.random.normal(k1, (130, 8))
+    x2 = jax.random.normal(k2, (77, 8))
+    v = jax.random.normal(k3, (77,))
+    full = ref.gram_matvec_ref(x1, x2, v, 0.4, row_chunk=1024)
+    chunked = ref.gram_matvec_ref(x1, x2, v, 0.4, row_chunk=32)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked), atol=1e-5)
+    want = ref.rbf_gram_ref(x1, x2, 0.4) @ v
+    np.testing.assert_allclose(np.asarray(full), np.asarray(want), atol=1e-5)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
