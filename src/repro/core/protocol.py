@@ -28,16 +28,22 @@ honestly pay their AUC cost, and int8 payloads score through the
 ``repro.comm.budget`` (strategy-rank order, unaffordable models
 skipped; a slack budget changes nothing).
 
-Ensemble evaluation streams the concatenated test sets through the
-fused ``ensemble_score`` serve path in ``eval_chunk``-sized blocks
-(each Ensemble is packed once and reused across every chunk).
+Ensemble evaluation is STREAMING: device test splits feed the fused
+``ensemble_score`` serve path in ``eval_chunk``-sized blocks whose
+scores fold straight into merge-able per-device AUC accumulators
+(``utils.metrics.streaming_grouped_auc``) — each Ensemble is packed
+once, and neither the concatenated test matrix nor a full score vector
+ever materializes.
 
 Local training runs on the ``repro.sim`` engine: ``engine="bucketed"``
 (default) fits whole buckets of devices in vectorized batched-Gram +
-vmap'd-SDCA passes; ``engine="loop"`` is the original sequential path,
-kept as the oracle for equivalence tests. Per-device randomness is
-derived via ``derive_device_seed`` in both modes, so results are
-bit-reproducible regardless of device iteration order or batching.
+vmap'd-SDCA passes; ``engine="sharded"`` lays the same buckets across
+all local accelerators (bitwise-identical results — see
+tests/test_engines.py); ``engine="loop"`` is the original sequential
+path, kept as the oracle for equivalence tests. Per-device randomness
+is derived via ``derive_device_seed`` in every mode, so results are
+bit-reproducible regardless of device iteration order, batching, or
+mesh shape.
 """
 from __future__ import annotations
 
@@ -51,7 +57,7 @@ from repro.core.svm import train_svm
 from repro.core.ensemble import Ensemble
 from repro.data.federated import FederatedDataset, DeviceData
 from repro.data.partition import pool_devices
-from repro.utils.metrics import roc_auc
+from repro.utils.metrics import roc_auc, streaming_grouped_auc
 from repro.utils.logging import get_logger
 
 if TYPE_CHECKING:  # runtime import would cycle: comm.budget <- core.selection
@@ -93,17 +99,26 @@ def _train_device(dev_id: int, dev: DeviceData, min_samples: int, lam: float, se
     return train_device(dev_id, dev, min_samples, lam, seed)
 
 
-def _mean_auc_over_devices(devices: Sequence["DeviceOutcome"], scores_fn) -> tuple:
-    """scores_fn(X) -> scores. Evaluates once on concatenated test sets."""
-    xs = np.concatenate([d.splits["test"].x for d in devices])
-    scores = scores_fn(xs)
-    aucs = []
-    off = 0
-    for d in devices:
-        n = d.splits["test"].n
-        aucs.append(roc_auc(d.splits["test"].y, scores[off : off + n]))
-        off += n
-    return float(np.mean(aucs)), np.array(aucs)
+def _mean_auc_over_devices(
+    devices: Sequence["DeviceOutcome"], scores_fn, chunk: int = 8192
+) -> tuple:
+    """scores_fn(X_block) -> scores for one (b, d) query block.
+
+    Streams every device's test split through merge-able per-device AUC
+    accumulators (``utils.metrics.streaming_grouped_auc``) in
+    ``chunk``-row blocks: the concatenated (N, d) test matrix never
+    materializes (feature memory is O(chunk)); the accumulators retain
+    the scores as per-device rank-statistic state (O(N) scalars in
+    exact mode — see the metrics module docstring for the fixed-memory
+    binned trade-off)."""
+    ga = streaming_grouped_auc(
+        scores_fn,
+        ((d.device_id, d.splits["test"].x, d.splits["test"].y) for d in devices),
+        chunk=chunk,
+    )
+    per = ga.compute()
+    aucs = np.array([per[d.device_id] for d in devices])
+    return float(np.mean(aucs)), aucs
 
 
 def run_protocol(
@@ -174,7 +189,8 @@ def run_protocol(
                     if not tids:
                         continue
                     ens = Ensemble([ex.received(i) for i in tids])
-                    auc, _ = _mean_auc_over_devices(devices, partial(ens.predict, chunk=eval_chunk))
+                    auc, _ = _mean_auc_over_devices(
+                        devices, partial(ens.predict, chunk=eval_chunk), eval_chunk)
                     trials.append(auc)
                 if trials:
                     ensemble_auc[strat][k] = float(np.mean(trials))
@@ -184,14 +200,16 @@ def run_protocol(
                 if not ids:
                     continue
                 ens = Ensemble([ex.received(i) for i in ids])
-                auc, _ = _mean_auc_over_devices(devices, partial(ens.predict, chunk=eval_chunk))
+                auc, _ = _mean_auc_over_devices(
+                    devices, partial(ens.predict, chunk=eval_chunk), eval_chunk)
                 ensemble_auc[strat][k] = auc
             ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
         log.info("%s/%s: %s", dataset.name, strat, ensemble_auc[strat])
 
     # --- full ensemble of all eligible devices ---
     full_ens = Ensemble([ex.received(i) for i in eligible_ids])
-    full_auc, full_aucs = _mean_auc_over_devices(devices, partial(full_ens.predict, chunk=eval_chunk))
+    full_auc, full_aucs = _mean_auc_over_devices(
+        devices, partial(full_ens.predict, chunk=eval_chunk), eval_chunk)
     ex.record_uploads(ledger, eligible_ids, "upload_full")
 
     best = {s: max(v.values()) for s, v in ensemble_auc.items() if v}

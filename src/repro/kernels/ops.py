@@ -8,11 +8,14 @@ validate kernel bodies on CPU).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from functools import partial
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.gram_matvec import gram_matvec_pallas
@@ -193,3 +196,123 @@ def ensemble_score_q8(x, q, scale, zero, coef, gammas):
     if _force_interpret():
         return ensemble_score_q8_pallas(x, q, scale, zero, coef, gammas, interpret=True)
     return _ens_q8_ref(x, q, scale, zero, coef, gammas)
+
+
+# ----------------------------------------------------------------------
+# kernel registry: every Pallas kernel, its oracle, and its shard specs
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel: implementation + oracle + dispatch + specs.
+
+    ``make_inputs(rng)`` builds a representative positional argument
+    tuple accepted by BOTH ``pallas_fn`` (plus ``interpret=True``) and
+    ``ref_fn`` — the auto-discovered parity suite in tests/test_kernels
+    walks the registry and checks the pair on every entry, so a kernel
+    cannot ship without an oracle (unregistered ``*_pallas`` functions
+    fail test collection outright).
+
+    ``shard_ranks`` are the sharded-dispatch specs: per argument, the
+    rank whose LEADING axis is an independent batch dimension that may
+    lay out along the sim mesh's ``devices`` axis (0 = replicate the
+    argument). ``out_rank`` is the same for the output — feed both to
+    ``sharding.rules.group_shard_specs`` to get the ``shard_map``
+    boundary specs the sharded population engine uses.
+    """
+
+    name: str
+    pallas_fn: Callable
+    ref_fn: Callable
+    dispatch: Callable
+    make_inputs: Callable[[np.random.Generator], tuple]
+    shard_ranks: Tuple[int, ...]
+    out_rank: int
+    tol: float = 1e-5
+
+    def shard_specs(self, mesh):
+        """(in_specs, out_specs) for shard_map over the sim mesh."""
+        from repro.sharding.rules import group_shard_specs
+
+        specs = group_shard_specs(mesh, self.shard_ranks + (self.out_rank,))
+        return specs[:-1], specs[-1]
+
+
+def _mk_rbf_gram(rng):
+    return (rng.normal(size=(48, 12)).astype(np.float32),
+            rng.normal(size=(40, 12)).astype(np.float32), 0.4)
+
+
+def _mk_gram_matvec(rng):
+    return (rng.normal(size=(48, 12)).astype(np.float32),
+            rng.normal(size=(40, 12)).astype(np.float32),
+            rng.normal(size=(40,)).astype(np.float32), 0.4)
+
+
+def _mk_rbf_gram_q8(rng):
+    return (rng.normal(size=(48, 12)).astype(np.float32),
+            rng.integers(-127, 128, size=(40, 12)).astype(np.int8),
+            rng.uniform(0.005, 0.1, size=12).astype(np.float32),
+            rng.normal(size=12).astype(np.float32), 0.4)
+
+
+def _mk_batched_rbf_gram(rng):
+    return (rng.normal(size=(4, 48, 12)).astype(np.float32),
+            rng.normal(size=(4, 40, 12)).astype(np.float32),
+            rng.uniform(0.1, 1.0, size=4).astype(np.float32))
+
+
+def _mk_flash_attention(rng):
+    # batch of 4: divisible by every sim mesh the CI lanes force
+    return tuple(rng.normal(size=(4, 64, 2, 16)).astype(np.float32)
+                 for _ in range(3))
+
+
+def _mk_ensemble_score(rng):
+    return (rng.normal(size=(40, 12)).astype(np.float32),
+            rng.normal(size=(3, 48, 12)).astype(np.float32),
+            (rng.normal(size=(3, 48)) / 48).astype(np.float32),
+            rng.uniform(0.1, 1.0, size=3).astype(np.float32))
+
+
+def _mk_ensemble_score_q8(rng):
+    return (rng.normal(size=(40, 12)).astype(np.float32),
+            rng.integers(-127, 128, size=(3, 48, 12)).astype(np.int8),
+            rng.uniform(0.005, 0.05, size=(3, 12)).astype(np.float32),
+            rng.normal(size=(3, 12)).astype(np.float32),
+            (rng.normal(size=(3, 48)) / 48).astype(np.float32),
+            rng.uniform(0.1, 1.0, size=3).astype(np.float32))
+
+
+KERNEL_REGISTRY: Dict[str, KernelSpec] = {
+    spec.name: spec
+    for spec in (
+        # rows of x1 are independent -> query-parallel over the mesh
+        KernelSpec("rbf_gram", rbf_gram_pallas, ref.rbf_gram_ref, rbf_gram,
+                   _mk_rbf_gram, shard_ranks=(2, 0, 0), out_rank=2),
+        KernelSpec("gram_matvec", gram_matvec_pallas, ref.gram_matvec_ref,
+                   gram_matvec, _mk_gram_matvec,
+                   shard_ranks=(2, 0, 0, 0), out_rank=1),
+        KernelSpec("rbf_gram_q8", rbf_gram_q8_pallas, ref.rbf_gram_q8_ref,
+                   rbf_gram_q8, _mk_rbf_gram_q8,
+                   shard_ranks=(2, 0, 0, 0, 0), out_rank=2),
+        # leading axis is the per-device group -> the sharded engine's
+        # data-parallel layout (sim mesh 'devices' axis)
+        KernelSpec("batched_rbf_gram", batched_rbf_gram_pallas,
+                   ref.batched_rbf_gram_ref, batched_rbf_gram,
+                   _mk_batched_rbf_gram, shard_ranks=(3, 3, 1), out_rank=3),
+        KernelSpec("flash_attention", flash_attention_pallas,
+                   ref.flash_attention_ref, flash_attention,
+                   _mk_flash_attention, shard_ranks=(4, 4, 4), out_rank=4,
+                   tol=2e-5),
+        # serve kernels: queries shard, the packed ensemble replicates
+        KernelSpec("ensemble_score", ensemble_score_pallas,
+                   ref.ensemble_score_ref, ensemble_score,
+                   _mk_ensemble_score, shard_ranks=(2, 0, 0, 0), out_rank=1,
+                   tol=1e-4),
+        KernelSpec("ensemble_score_q8", ensemble_score_q8_pallas,
+                   ref.ensemble_score_q8_ref, ensemble_score_q8,
+                   _mk_ensemble_score_q8,
+                   shard_ranks=(2, 0, 0, 0, 0, 0), out_rank=1, tol=1e-4),
+    )
+}

@@ -1,4 +1,9 @@
 """Launchers: mesh factory, dry-run, train/serve drivers, one-shot FL run."""
-from repro.launch.mesh import make_production_mesh, make_debug_mesh, mesh_chips
+from repro.launch.mesh import (
+    make_production_mesh,
+    make_debug_mesh,
+    make_sim_mesh,
+    mesh_chips,
+)
 
-__all__ = ["make_production_mesh", "make_debug_mesh", "mesh_chips"]
+__all__ = ["make_production_mesh", "make_debug_mesh", "make_sim_mesh", "mesh_chips"]

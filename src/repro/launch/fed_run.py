@@ -14,10 +14,14 @@ then distills into a student in ONE round.
 ``--mode sim`` — the population-scale SVM protocol on the
 device-parallel ``repro.sim`` engine: pick any registered scenario,
 train hundreds of local models in bucketed vectorized passes, and
-report selection/ensembling quality.
+report selection/ensembling quality. ``--engine sharded`` lays the
+bucket groups across all local accelerators (``--mesh N`` caps the
+mesh; results are bitwise-identical to the bucketed tier).
 
   PYTHONPATH=src python -m repro.launch.fed_run --mode sim \
       --scenario dirichlet --devices 512 --k 10 50
+  PYTHONPATH=src python -m repro.launch.fed_run --mode sim \
+      --scenario dirichlet --devices 4096 --engine sharded --mesh 4
 
 Sim-mode uploads go through the ``repro.comm`` wire (``--codec fp32 |
 fp16 | int8 | topk[:ratio]``) with an optional per-selection byte cap
@@ -74,6 +78,7 @@ def run_sim(args) -> dict:
         mean_samples=args.mean_samples,
         ks=tuple(args.k),
         engine=args.engine,
+        mesh_shards=args.mesh,
         scenario_params=params,
         codec=args.codec,
         budget_bytes=args.budget_bytes,
@@ -84,11 +89,22 @@ def run_sim(args) -> dict:
         log.info("bucket %4d: +%3d devices (%d/%d done)",
                  u.bucket, len(u.outcomes), u.done, u.total)
 
+    # report the ACTUAL shard count (make_sim_mesh clamps the request
+    # to local devices and floors to a power of two), so a degenerated
+    # mesh is visible in the JSON instead of echoing the flag back
+    mesh_used = None
+    if args.engine == "sharded":
+        from repro.sim import make_shard_ctx
+
+        mesh_used = make_shard_ctx(args.mesh).n_shards
+
     report = run_population(cfg, on_update=progress)
     out = {
         "mode": "sim",
         "scenario": report.scenario,
         "engine": args.engine,
+        "mesh": mesh_used,
+        "mesh_requested": args.mesh,
         "devices": report.n_devices,
         "available": report.n_available,
         "eligible": report.n_eligible,
@@ -125,8 +141,14 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=256, help="sim mode")
     ap.add_argument("--mean-samples", type=int, default=80, help="sim mode")
     ap.add_argument("--k", type=int, nargs="+", default=[10], help="sim mode")
-    ap.add_argument("--engine", default="bucketed", choices=["bucketed", "loop"],
-                    help="sim mode")
+    ap.add_argument("--engine", default="bucketed",
+                    choices=["bucketed", "sharded", "loop"],
+                    help="sim mode: bucketed (one device) | sharded "
+                         "(mesh-parallel across local accelerators) | "
+                         "loop (sequential oracle)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="sim mode, --engine sharded: cap the sim mesh "
+                         "at this many devices (default: all local)")
     ap.add_argument("--scenario-param", action="append", default=[],
                     metavar="KEY=VALUE", help="sim mode: e.g. alpha=0.1")
     ap.add_argument("--codec", default="fp32",

@@ -16,6 +16,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_sim_mesh(shards: int | None = None):
+    """1-D ``devices`` mesh for the sharded sim engine (``repro.sim``).
+
+    Lays SDCA bucket groups data-parallel across local accelerators.
+    ``shards`` defaults to every visible device and is floored to a
+    power of two so it always divides the engine's power-of-two group
+    padding (a 1-device host degenerates to the bucketed layout, which
+    is exactly what the differential tests exploit on CPU).
+    """
+    n = len(jax.devices())
+    shards = n if shards is None else max(1, min(shards, n))
+    shards = 1 << (shards.bit_length() - 1)  # floor to a power of two
+    return jax.make_mesh((shards,), ("devices",))
+
+
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many real devices exist (tests)."""
     n = len(jax.devices())

@@ -17,7 +17,11 @@ cache.py      scored-query LRU cache keyed on raw query bytes; hits
               never enter a batch.
 service.py    ``EnsembleScorer`` — adapts a packed ``StackedEnsemble``
               (or an ``Ensemble``) to the scheduler's score_fn
-              contract with one jit'd fused kernel call per batch.
+              contract with one jit'd fused kernel call per batch;
+              ``EnsembleScorer.evaluate`` streams (group, x, y)
+              triples through the merge-able per-group AUC
+              accumulators in ``repro.utils.metrics`` (fixed-memory
+              eval, composes across shards/micro-batches).
 
 The same scheduler drives both serving workloads in this repo:
   * the SVM-ensemble path (``EnsembleScorer``; benchmarked by

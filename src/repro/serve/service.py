@@ -9,13 +9,14 @@ bucket shape. Dispatch policy per backend is documented in the
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import Iterable, Tuple, Union
 
 import numpy as np
 
 from repro.core.ensemble import Ensemble, StackedEnsemble
 from repro.core.svm import SVMModel
 from repro.serve.scheduler import MicroBatchScheduler, ServeConfig
+from repro.utils.metrics import GroupedAUC, streaming_grouped_auc
 
 
 def _pack(ensemble):
@@ -62,3 +63,20 @@ class EnsembleScorer:
     def scheduler(self, config: ServeConfig = ServeConfig()) -> MicroBatchScheduler:
         """A micro-batching scheduler serving this ensemble."""
         return MicroBatchScheduler(self, config)
+
+    def evaluate(
+        self,
+        groups: Iterable[Tuple[object, np.ndarray, np.ndarray]],
+        *,
+        chunk: int = 4096,
+        acc: GroupedAUC = None,
+    ) -> GroupedAUC:
+        """Streaming per-group AUC over (group, x, y) triples.
+
+        Rows from consecutive groups pack into ``chunk``-sized fused
+        kernel calls, and scores fold straight into merge-able
+        ``StreamingAUC`` states — no (groups x samples) score matrix.
+        Pass ``acc`` to keep folding into an existing accumulator
+        (e.g. one per shard, merged at the aggregation barrier).
+        """
+        return streaming_grouped_auc(self, groups, chunk=chunk, acc=acc)

@@ -1,5 +1,6 @@
 from repro.sharding.rules import (
     ShardingRules,
+    group_shard_specs,
     batch_axes,
     shard_if_divisible,
     param_sharding,
@@ -7,6 +8,7 @@ from repro.sharding.rules import (
 )
 
 __all__ = [
+    "group_shard_specs",
     "ShardingRules",
     "batch_axes",
     "shard_if_divisible",

@@ -11,7 +11,7 @@ valid across every (arch x mesh) combination.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -44,6 +44,11 @@ DEFAULT_RULES: Dict[str, Optional[str]] = {
     # can't use the data axis (long_500k batch=1).
     "kv_seq": None,
     "member": "data",
+    # sim-side: SDCA bucket groups lay out along the 1-D sim mesh
+    # ("devices" axis, see launch.mesh.make_sim_mesh) in the sharded
+    # population engine. LM meshes have no "devices" axis, so the
+    # assignment drops to replicated there — one table serves both sides.
+    "group": "devices",
 }
 
 
@@ -131,4 +136,26 @@ def spec_tree(mesh: Mesh, shapes, logical_axes, rules: ShardingRules):
     """Like param_sharding but returns raw PartitionSpecs."""
     return jax.tree.map(
         lambda p, names: logical_to_spec(p.shape, names, mesh, rules), shapes, logical_axes
+    )
+
+
+def group_shard_specs(
+    mesh: Mesh, ranks: Sequence[int], rules: Optional[ShardingRules] = None
+) -> Tuple[P, ...]:
+    """``shard_map`` specs for arrays batched on a leading "group" axis.
+
+    One spec per argument rank: rank-r arrays shard their leading dim
+    over whatever mesh axis the rules assign to the logical "group"
+    axis (the sim mesh's "devices"); rank 0 means a replicated scalar
+    (P()). This is the boundary contract for the sharded population
+    engine and the batched kernels it dispatches (`batched_rbf_gram`);
+    the kernel registry in ``kernels.ops`` records which leading axes
+    are shardable this way.
+    """
+    rules = ShardingRules() if rules is None else rules
+    axis = rules.lookup("group")
+    axis = axis if axis in mesh.axis_names else None
+    return tuple(
+        P(axis, *([None] * (r - 1))) if r and axis is not None else P()
+        for r in ranks
     )

@@ -4,7 +4,9 @@ engine.py      device-parallel local training: bucketed batched-Gram +
                vmap'd SDCA passes (Pallas `batched_rbf_gram` on TPU,
                vmap'd oracle elsewhere), streaming GroupUpdates; the
                sequential loop survives as `mode="loop"`, the oracle
-               for equivalence tests
+               for equivalence tests; `mode="sharded"` lays the same
+               bucket groups over the local accelerator mesh with
+               shard_map (bitwise-equal to bucketed, tests/test_engines)
 scenarios.py   registry of named, seedable federation generators (IID,
                Dirichlet label skew, quantity skew, feature shift,
                temporal drift, availability/straggler masks)
@@ -18,7 +20,9 @@ from repro.sim.engine import (
     DeviceOutcome,
     GroupUpdate,
     PopulationResult,
+    ShardCtx,
     iter_population,
+    make_shard_ctx,
     train_device,
     train_population,
 )
@@ -33,8 +37,8 @@ from repro.sim.scenarios import (
 from repro.sim.population import PopulationConfig, PopulationReport, run_population
 
 __all__ = [
-    "DeviceOutcome", "GroupUpdate", "PopulationResult",
-    "iter_population", "train_device", "train_population",
+    "DeviceOutcome", "GroupUpdate", "PopulationResult", "ShardCtx",
+    "iter_population", "make_shard_ctx", "train_device", "train_population",
     "Federation", "SCENARIOS", "ScenarioSpec",
     "list_scenarios", "make_federation", "register_scenario",
     "PopulationConfig", "PopulationReport", "run_population",

@@ -1,10 +1,19 @@
 """Device-parallel local training engine (population-scale simulation).
 
+Three tiers, each the oracle for the next (docs/TESTING.md):
+
+  mode="loop"      sequential per-device oracle: one Gram, one SDCA
+                   solve, one scoring pass per device
+  mode="bucketed"  whole cohorts per vectorized pass on ONE accelerator
+  mode="sharded"   the bucketed passes laid out over the sim mesh
+                   (`launch.mesh.make_sim_mesh`, 1-D ``devices`` axis)
+                   with `shard_map` — pure data parallelism over the
+                   group axis, one gather at the aggregation barrier
+
 The paper's round trains every device's RBF-SVM independently — which
-the sequential loop (`mode="loop"`, kept here as the oracle) dispatches
-one device at a time: one Gram, one SDCA solve, one val scoring per
-device. At hundreds-to-thousands of devices the per-dispatch overhead
-dominates and experiments cap out at tens of devices.
+the sequential loop dispatches one device at a time. At hundreds-to-
+thousands of devices the per-dispatch overhead dominates and
+experiments cap out at tens of devices.
 
 `mode="bucketed"` instead fits whole cohorts of devices in single
 vectorized passes:
@@ -32,13 +41,24 @@ Numerics: padded Gram rows/cols are masked to zero and padded labels
 are +1, exactly matching `train_svm`'s padding, so per-device dual
 coefficients — and hence val/test AUCs — match the sequential loop to
 float-accumulation-order noise (the equivalence bar in tests is 1e-4).
+
+`mode="sharded"` reuses the bucketed host-side pipeline byte-for-byte
+(same seeds, same bucketing, same padding) and only swaps the two jit
+calls for their `shard_map` twins. Per-device AUCs match the bucketed
+tier EXACTLY on any mesh; models and scores additionally match bitwise
+on the mesh sizes CI pins (1-4 shards, where per-shard batches keep
+the bucketed op shapes — larger meshes may re-associate reductions, so
+there the agreement is tight float tolerance). tests/test_engines.py
+holds both bars, on 1-shard degenerate meshes and real multi-device
+splits alike. Per-device streaming evaluation composes through the
+merge-able accumulators in `utils.metrics`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -148,8 +168,7 @@ def train_device(
 # bucketed (device-parallel) path
 # ----------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("epochs",))
-def _fit_group(xp, yp, n_real, gammas, lam, epochs):
+def _fit_group_body(xp, yp, n_real, gammas, lam, epochs):
     """Batched Gram + vmap'd SDCA for one bucket of devices.
 
     xp: (g, b, d) zero-padded train features; yp: (g, b) labels padded
@@ -164,8 +183,7 @@ def _fit_group(xp, yp, n_real, gammas, lam, epochs):
     return jax.vmap(lambda Kg, yg, ng: _sdca(Kg, yg, ng, lam, epochs))(K, yp, n_real)
 
 
-@jax.jit
-def _score_group(xq, sup, coef, gammas):
+def _score_group_body(xq, sup, coef, gammas):
     """Batched decision scores: (g, q, d) queries against (g, b, d)
     supports. Zero-padded supports contribute nothing via zero coefs;
     padded query rows are sliced off by the caller."""
@@ -175,6 +193,80 @@ def _score_group(xq, sup, coef, gammas):
     return jnp.einsum("gqb,gb->gq", Kq, coef)
 
 
+_fit_group = jax.jit(_fit_group_body, static_argnames=("epochs",))
+_score_group = jax.jit(_score_group_body)
+
+
+# ----------------------------------------------------------------------
+# sharded (mesh-parallel) dispatch
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh-parallel dispatch for one engine run: the same `_fit_group`
+    / `_score_group` math, `shard_map`-ped over the sim mesh's
+    ``devices`` axis on the leading group dim.
+
+    Every batch element (one device's SDCA problem) is independent, so
+    laying groups out along the mesh is pure data parallelism: each
+    accelerator fits and scores its slice of the bucket, and the only
+    collective is the output gather at the aggregation barrier (the
+    out_specs ``devices`` layout — no psum is needed because nothing is
+    reduced across devices before selection). Host-side bucketing,
+    padding, and seeds are byte-identical to the bucketed tier, which
+    is why per-device AUCs agree exactly on any mesh — and models and
+    scores bitwise on the CI-pinned 1-4 shard meshes (see
+    tests/test_engines.py for the precise bars).
+    """
+
+    mesh: object
+    fit: Callable
+    score: Callable
+
+    @property
+    def n_shards(self) -> int:
+        return int(np.prod(self.mesh.devices.shape))
+
+
+_SHARD_CTX_CACHE: Dict[tuple, ShardCtx] = {}
+
+
+def make_shard_ctx(shards: Optional[int] = None, epochs: int = 20) -> ShardCtx:
+    """Build (and cache) the sharded dispatch context.
+
+    The mesh comes from ``launch.mesh.make_sim_mesh`` (1-D ``devices``
+    axis over local accelerators, power-of-two sized); the shard_map
+    boundary specs come from ``sharding.rules.group_shard_specs`` — the
+    same logical-axis table the LM side uses, with bucket groups on the
+    logical "group" axis.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.launch.mesh import make_sim_mesh
+    from repro.sharding.rules import group_shard_specs
+
+    mesh = make_sim_mesh(shards)
+    key = (mesh.devices.shape, tuple(mesh.axis_names), epochs)
+    if key in _SHARD_CTX_CACHE:
+        return _SHARD_CTX_CACHE[key]
+
+    # fit: (xp, yp, n_real, gammas) sharded on the group axis; lam is a
+    # replicated scalar; alpha comes back group-sharded (the gather).
+    fit_specs = group_shard_specs(mesh, (3, 2, 1, 1, 0))
+    fit = jax.jit(shard_map(
+        partial(_fit_group_body, epochs=epochs),
+        mesh=mesh, in_specs=fit_specs, out_specs=fit_specs[1],
+    ))
+    score_specs = group_shard_specs(mesh, (3, 3, 2, 1))
+    score = jax.jit(shard_map(
+        _score_group_body,
+        mesh=mesh, in_specs=score_specs, out_specs=score_specs[2],
+    ))
+    ctx = ShardCtx(mesh, fit, score)
+    _SHARD_CTX_CACHE[key] = ctx
+    return ctx
+
+
 def _pad_pow2(n: int, lo: int = 8) -> int:
     return max(lo, 1 << (n - 1).bit_length())
 
@@ -182,12 +274,19 @@ def _pad_pow2(n: int, lo: int = 8) -> int:
 def _train_bucket_group(
     members: List[tuple], bucket: int, lam: float, epochs: int,
     pad_floor: int = 8,
+    shard: Optional[ShardCtx] = None,
 ) -> List[DeviceOutcome]:
     """members: [(dev_id, splits)] sharing one SDCA bucket size.
 
     ``pad_floor`` bounds the power-of-two device padding; callers lower
-    it when the Gram memory budget allows fewer than 8 devices.
+    it when the Gram memory budget allows fewer than 8 devices. With a
+    ``shard`` context the group axis additionally pads to the mesh size
+    (a power of two, so the pow-of-two padding absorbs it) and the fit
+    and scoring passes run mesh-parallel.
     """
+    score_fn = _score_group if shard is None else shard.score
+    if shard is not None:
+        pad_floor = max(pad_floor, shard.n_shards)
     g_real = len(members)
     g = _pad_pow2(g_real, lo=pad_floor)
     trains = [sp["train"] for _, sp in members]
@@ -204,9 +303,10 @@ def _train_bucket_group(
         xp[i, : t.n] = t.x
         yp[i, : t.n] = t.y
 
+    fit_args = (jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(n_real),
+                jnp.asarray(gammas), lam)
     alpha = np.asarray(
-        _fit_group(jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(n_real),
-                   jnp.asarray(gammas), lam, epochs)
+        shard.fit(*fit_args) if shard is not None else _fit_group(*fit_args, epochs)
     )
     # coef = alpha * y / (lam * n); zero-label padding zeroes padded coefs
     y0 = np.where(np.arange(bucket)[None, :] < n_real[:, None], yp, 0.0)
@@ -220,8 +320,8 @@ def _train_bucket_group(
         for i, a in enumerate(qs):
             xq[i, : len(a)] = a
         scores[split] = np.asarray(
-            _score_group(jnp.asarray(xq), jnp.asarray(xp),
-                         jnp.asarray(coef.astype(np.float32)), jnp.asarray(gammas))
+            score_fn(jnp.asarray(xq), jnp.asarray(xp),
+                     jnp.asarray(coef.astype(np.float32)), jnp.asarray(gammas))
         )
 
     outcomes = []
@@ -252,15 +352,22 @@ def iter_population(
     epochs: int = 20,
     group_cap: int = 256,
     available: Optional[np.ndarray] = None,
+    shards: Optional[int] = None,
 ) -> Iterator[GroupUpdate]:
     """Train a device population, streaming one GroupUpdate per batch.
 
     ``available`` (optional bool mask, len n_devices) drops absent
     devices entirely — they neither train nor report (the scenario
     registry's availability masks plug in here).
+
+    ``mode="sharded"`` runs the bucketed passes mesh-parallel across
+    local accelerators (``shards`` caps how many; default all — see
+    ``make_shard_ctx``). Bucketing, seeds, and padding are identical to
+    ``"bucketed"``, so the two tiers produce the same federation.
     """
-    if mode not in ("bucketed", "loop"):
+    if mode not in ("bucketed", "loop", "sharded"):
         raise ValueError(f"unknown engine mode {mode!r}")
+    shard = make_shard_ctx(shards, epochs) if mode == "sharded" else None
     min_samples = dataset.min_samples if min_samples is None else min_samples
     ids = [
         i for i in range(dataset.n_devices)
@@ -302,14 +409,18 @@ def iter_population(
         members = by_bucket[bucket]
         # floor to a power of two so the pow2 group padding inside
         # _train_bucket_group cannot overshoot the Gram memory budget;
-        # huge buckets (rare, giant devices) drop below 8 per group
-        cap = max(1, min(group_cap, GRAM_ELEM_BUDGET // (bucket * bucket)))
+        # huge buckets (rare, giant devices) drop below 8 per group.
+        # The Gram budget is PER DEVICE: a sharded run holds 1/n_shards
+        # of each group per accelerator, so its groups grow n_shards x
+        # larger at the same per-device footprint (fewer dispatches).
+        budget = GRAM_ELEM_BUDGET * (shard.n_shards if shard else 1)
+        cap = max(1, min(group_cap, budget // (bucket * bucket)))
         cap = 1 << (cap.bit_length() - 1)
         for lo in range(0, len(members), cap):
             t0 = time.time()
             outs = _train_bucket_group(
                 members[lo : lo + cap], bucket, lam, epochs,
-                pad_floor=min(8, cap),
+                pad_floor=min(8, cap), shard=shard,
             )
             done += len(outs)
             yield GroupUpdate(bucket, outs, time.time() - t0, done, total)

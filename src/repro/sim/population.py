@@ -19,6 +19,7 @@ onto the ledger, and reported under ``ensemble_auc["distilled"]``.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable, Dict, Mapping, Optional, Sequence
 
 import numpy as np
@@ -28,7 +29,7 @@ from repro.core.ensemble import Ensemble
 from repro.distill import DistillConfig, distill_round
 from repro.sim.engine import GroupUpdate, train_population
 from repro.sim.scenarios import Federation, make_federation
-from repro.utils.metrics import roc_auc
+from repro.utils.metrics import streaming_grouped_auc
 from repro.utils.logging import get_logger
 
 log = get_logger("sim.population")
@@ -45,7 +46,8 @@ class PopulationConfig:
     scenario_params: Mapping = dataclasses.field(default_factory=dict)
     # training
     lam: float = 0.01
-    engine: str = "bucketed"        # "bucketed" | "loop" (oracle)
+    engine: str = "bucketed"        # "bucketed" | "sharded" | "loop" (oracle)
+    mesh_shards: Optional[int] = None  # sharded engine: mesh size cap (None = all local devices)
     # selection + evaluation
     ks: Sequence[int] = (10,)
     strategies: Sequence[str] = ("cv", "data", "random")
@@ -113,7 +115,7 @@ def run_population(
 
     pop = train_population(
         ds, on_update=on_update, lam=cfg.lam, seed=cfg.seed, mode=cfg.engine,
-        available=federation.available,
+        available=federation.available, shards=cfg.mesh_shards,
     )
     outcomes, train_s = pop.outcomes, pop.seconds
 
@@ -133,15 +135,20 @@ def run_population(
     eval_ids = [o.device_id for o in outcomes]
     if len(eval_ids) > cfg.eval_device_cap:
         eval_ids = sorted(rng.choice(eval_ids, cfg.eval_device_cap, replace=False))
-    eval_x = np.concatenate([by_id[i].splits["test"].x for i in eval_ids])
-    offsets = np.cumsum([0] + [by_id[i].splits["test"].n for i in eval_ids])
 
-    def mean_auc(scores: np.ndarray) -> float:
-        aucs = [
-            roc_auc(by_id[i].splits["test"].y, scores[offsets[j] : offsets[j + 1]])
-            for j, i in enumerate(eval_ids)
-        ]
-        return float(np.mean(aucs))
+    def mean_auc(predict_fn) -> float:
+        """Stream the eval devices' test splits through merge-able
+        per-device AUC accumulators (utils.metrics): no concatenated
+        test matrix — features flow in O(eval_chunk) blocks; scores
+        fold into per-device rank-statistic state (see the metrics
+        module docstring for exact vs fixed-memory binned modes)."""
+        ga = streaming_grouped_auc(
+            predict_fn,
+            ((i, by_id[i].splits["test"].x, by_id[i].splits["test"].y)
+             for i in eval_ids),
+            chunk=cfg.eval_chunk,
+        )
+        return ga.mean()
 
     ensemble_auc: Dict[str, Dict[int, float]] = {}
     time_to_aggregate: Dict[str, Dict[int, float]] = {}
@@ -155,7 +162,7 @@ def run_population(
             ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
             ens = Ensemble([ex.received(i) for i in ids])
             ensemble_auc[strat][k] = mean_auc(
-                ens.predict(eval_x, chunk=cfg.eval_chunk)
+                partial(ens.predict, chunk=cfg.eval_chunk)
             )
             if federation.channel is not None:
                 time_to_aggregate[strat][k] = federation.channel.time_to_aggregate(
@@ -186,7 +193,7 @@ def run_population(
                            default_proxy_params=defaults)
         student, student_codec = dr.student, dr.codec
         ensemble_auc["distilled"] = {
-            best_k: mean_auc(student.predict(eval_x, chunk=cfg.eval_chunk))
+            best_k: mean_auc(partial(student.predict, chunk=cfg.eval_chunk))
         }
         log.info("%s/distilled (solver=%s, proxy=%s, codec=%s): %s",
                  ds.name, cfg.distill.solver, cfg.distill.proxy,

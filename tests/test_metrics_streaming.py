@@ -1,0 +1,186 @@
+"""Streaming-metrics property tests: merged partial AUC states must
+equal the exact batch AUC under ARBITRARY splits and permutations of
+the stream (the merge-ability contract the sharded engine and the
+population eval both lean on), plus sklearn parity when it is around.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.utils.metrics import (
+    GroupedAUC,
+    StreamingAUC,
+    roc_auc,
+    streaming_grouped_auc,
+)
+
+try:
+    from sklearn.metrics import roc_auc_score
+
+    HAVE_SKLEARN = True
+except ImportError:
+    HAVE_SKLEARN = False
+
+
+def _case_strategy():
+    """(labels, scores) with ties likely (few distinct score values)."""
+    return st.integers(1, 120).flatmap(lambda n: st.tuples(
+        st.lists(st.integers(0, 1), min_size=n, max_size=n),
+        st.lists(st.sampled_from([-2.0, -0.5, -0.25, 0.0, 0.25, 0.5, 2.0])
+                 | st.floats(-4, 4, allow_nan=False, width=32),
+                 min_size=n, max_size=n),
+    ))
+
+
+if HAVE_HYPOTHESIS:
+    _given_case = given(_case_strategy(), st.randoms(use_true_random=False))
+else:  # the shim skips at call time; the decorator still needs to exist
+    _given_case = given(None, None)
+
+
+@_given_case
+@settings(max_examples=120, deadline=None)
+def test_merged_partials_equal_exact_batch_auc(case, pyrandom):
+    """Split the stream anywhere, permute the parts, distribute them
+    over several accumulators, merge — the result is the batch AUC to
+    1e-9 (it is in fact algebraically identical: AUC is rank-based)."""
+    labels, scores = np.asarray(case[0]), np.asarray(case[1])
+    exact = roc_auc(labels, scores)
+
+    idx = list(range(len(labels)))
+    pyrandom.shuffle(idx)
+    n_parts = pyrandom.randint(1, 6)
+    cuts = sorted(pyrandom.randint(0, len(idx)) for _ in range(n_parts - 1))
+    parts = np.split(np.asarray(idx, int), cuts)
+
+    accs = [StreamingAUC() for _ in range(pyrandom.randint(1, 4))]
+    for j, part in enumerate(parts):
+        accs[j % len(accs)].update(labels[part], scores[part])
+    merged = accs[0]
+    for acc in accs[1:]:
+        merged.merge(acc)
+    assert abs(merged.compute() - exact) < 1e-9
+
+
+@_given_case
+@settings(max_examples=60, deadline=None)
+def test_grouped_accumulators_merge_groupwise(case, pyrandom):
+    labels, scores = np.asarray(case[0]), np.asarray(case[1])
+    groups = np.asarray([pyrandom.randint(0, 2) for _ in labels])
+    a, b = GroupedAUC(), GroupedAUC()
+    half = len(labels) // 2
+    for dst, sl in ((a, slice(None, half)), (b, slice(half, None))):
+        for g in np.unique(groups[sl]):
+            m = groups[sl] == g
+            dst.update(int(g), labels[sl][m], scores[sl][m])
+    merged = a.merge(b).compute()
+    for g in np.unique(groups):
+        assert abs(merged[int(g)] - roc_auc(labels[groups == g],
+                                            scores[groups == g])) < 1e-9
+
+
+@pytest.mark.skipif(not HAVE_SKLEARN, reason="sklearn not installed")
+def test_streaming_auc_matches_sklearn():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = int(rng.integers(2, 200))
+        y = rng.integers(0, 2, n)
+        s = np.round(rng.normal(size=n), int(rng.integers(0, 3)))
+        if len(np.unique(y)) < 2:
+            continue
+        acc = StreamingAUC()
+        for part in np.array_split(np.arange(n), rng.integers(1, 5)):
+            acc.update(y[part], s[part])
+        assert abs(acc.compute() - roc_auc_score(y, s)) < 1e-12
+
+
+# ----------------------------------------------------------------------
+# plain pytest coverage (runs without hypothesis)
+# ----------------------------------------------------------------------
+
+def test_exact_split_merge_permutation_sweep():
+    """Deterministic mirror of the hypothesis property."""
+    rng = np.random.default_rng(1)
+    for _ in range(100):
+        n = int(rng.integers(1, 80))
+        y = rng.integers(0, 2, n)
+        s = np.round(rng.normal(size=n), int(rng.integers(0, 3)))
+        exact = roc_auc(y, s)
+        perm = rng.permutation(n)
+        parts = np.array_split(perm, rng.integers(1, 5))
+        accs = [StreamingAUC() for _ in range(int(rng.integers(1, 4)))]
+        for j, part in enumerate(parts):
+            accs[j % len(accs)].update(y[part], s[part])
+        merged = accs[0]
+        for a in accs[1:]:
+            merged.merge(a)
+        assert abs(merged.compute() - exact) < 1e-9
+
+
+def test_degenerate_streams_return_half():
+    assert StreamingAUC().compute() == 0.5
+    assert StreamingAUC().update([1, 1], [0.3, 0.9]).compute() == 0.5
+    assert StreamingAUC(bins=16).update([0, 0], [0.1, 0.2]).compute() == 0.5
+
+
+def test_binned_mode_is_fixed_memory_and_bounded_error():
+    """O(bins) state no matter the stream length; error vanishes as the
+    in-bin cross-pair mass does."""
+    rng = np.random.default_rng(2)
+    acc = StreamingAUC(bins=4096, score_range=(-4, 4))
+    ys, ss = [], []
+    for _ in range(30):
+        y = rng.integers(0, 2, 1000)
+        s = np.clip(rng.normal(size=1000), -3.9, 3.9)
+        acc.update(y, s)
+        ys.append(y)
+        ss.append(s)
+    assert acc._hist.size == 2 * 4096  # state never grew
+    exact = roc_auc(np.concatenate(ys), np.concatenate(ss))
+    assert abs(acc.compute() - exact) < 2e-3
+
+
+def test_merge_copies_partial_state_no_aliasing():
+    """A shard may keep accumulating after the barrier merge; the
+    merged result must not see those later updates (regression: merge
+    used to alias the source's per-group accumulators)."""
+    a, b = GroupedAUC(), GroupedAUC()
+    b.update("g", [1, 0], [0.9, 0.1])
+    a.merge(b)
+    frozen = a.compute()["g"]
+    b.update("g", [0, 1], [0.9, 0.1])  # post-barrier shard activity
+    assert a.compute()["g"] == frozen
+    assert b.compute()["g"] != frozen
+    # and the reverse direction: updating the merged side leaves b alone
+    a.update("g", [1, 0], [0.2, 0.8])
+    assert abs(b.compute()["g"] - 0.5) < 1e-12
+
+
+def test_binned_merge_requires_identical_binning():
+    a = StreamingAUC(bins=8)
+    with pytest.raises(ValueError, match="binning"):
+        a.merge(StreamingAUC(bins=16))
+    with pytest.raises(ValueError, match="binning"):
+        a.merge(StreamingAUC())
+
+
+def test_streaming_driver_chunks_match_materialized_path():
+    """The chunked driver produces the same per-group AUCs as scoring
+    one giant concatenated matrix, for any chunk size."""
+    rng = np.random.default_rng(3)
+    groups = []
+    for g in range(9):
+        m = int(rng.integers(0, 50))
+        groups.append((g, rng.normal(size=(m, 6)).astype(np.float32),
+                       rng.integers(0, 2, m)))
+
+    def score_fn(xb):
+        return np.tanh(xb).sum(axis=1)
+
+    want = {g: roc_auc(y, score_fn(x)) for g, x, y in groups}
+    for chunk in (1, 7, 64, 10_000):
+        got = streaming_grouped_auc(score_fn, groups, chunk=chunk).compute()
+        assert got.keys() == want.keys()
+        for g in want:
+            assert abs(got[g] - want[g]) < 1e-12, (chunk, g)

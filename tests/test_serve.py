@@ -306,3 +306,36 @@ def test_ensemble_scorer_through_scheduler_matches_oracle(rng):
     np.testing.assert_allclose(got2, got, atol=1e-6)
     assert sched.stats.batches == before
     assert sched.stats.answered_from_cache == len(queries)
+
+
+def test_ensemble_scorer_streaming_evaluate_matches_materialized(rng):
+    """EnsembleScorer.evaluate == per-group roc_auc on full score
+    arrays, at any chunk size, and partial accumulators merge."""
+    from repro.utils.metrics import GroupedAUC, roc_auc
+
+    members = []
+    for i in range(4):
+        x, y = _blob_data(np.random.default_rng(10 + i), n=40)
+        members.append(train_svm(x, y, lam=0.02))
+    scorer = EnsembleScorer(Ensemble(members))
+    local = np.random.default_rng(42)
+    groups = []
+    for g in range(5):
+        m = int(local.integers(3, 60))
+        gx = local.normal(0, 1, (m, members[0].support_x.shape[1])).astype(np.float32)
+        gy = local.integers(0, 2, m)
+        groups.append((g, gx, gy))
+    want = {g: roc_auc(gy, scorer(gx)) for g, gx, gy in groups}
+
+    for chunk in (8, 64, 4096):
+        got = scorer.evaluate(groups, chunk=chunk).compute()
+        assert got.keys() == want.keys()
+        for g in want:
+            assert abs(got[g] - want[g]) < 1e-9, (chunk, g)
+
+    # shard-style composition: two partial accumulators, merged
+    a = scorer.evaluate(groups[:2], chunk=16)
+    b = scorer.evaluate(groups[2:], chunk=16, acc=GroupedAUC())
+    merged = a.merge(b).compute()
+    for g in want:
+        assert abs(merged[g] - want[g]) < 1e-9
