@@ -1,15 +1,27 @@
-"""Mesh-sharded engine scaling curve: devices-per-host x population.
+"""Mesh-sharded + streamed engine scaling curves.
 
-For each population size the bench trains the SAME federation through
-the bucketed single-device engine and the sharded engine at every
-power-of-two shard count the host exposes (1..n_local_devices), and
-records warm wall-clock throughput (devices/second, best of
-``repeats``) plus the cross-tier equivalence delta — the acceptance
-bar is that sharded per-device val AUCs match bucketed EXACTLY (delta
-0.0) at every shard count, on several scenarios.
+Sharded section: for each population size the bench trains the SAME
+federation through the bucketed single-device engine and the sharded
+engine at every power-of-two shard count the host exposes
+(1..n_local_devices), and records warm wall-clock throughput
+(devices/second, best of ``repeats``) plus the cross-tier equivalence
+delta — the acceptance bar is that sharded per-device val AUCs match
+bucketed EXACTLY (delta 0.0) at every shard count, on several
+scenarios.
+
+Streaming section: the lazy ``DeviceStream`` tier walked to 10^6
+devices in fixed-size chunks, recording devices/second AND peak host
+RSS per population — the flat-memory claim measured, not asserted.
+The per-device workload is deliberately small (recorded in the JSON's
+``streaming.config``) so the curve measures the streaming machinery,
+not SDCA throughput (``sim_bench`` owns that); only a minority of
+devices clear ``min_samples`` and train. A ``streamed_equivalence``
+section re-checks the streamed-vs-bucketed round (per-device val AUCs,
+ledger byte totals, ensemble tables, distilled student) at bench scale
+across scenarios x codecs — every delta must be 0.0 / exactly equal.
 
 Results also land in a JSON file (``shard_bench.json`` next to this
-script, or argv ``--out PATH``) so CI keeps the scaling curve as an
+script, or argv ``--out PATH``) so CI keeps the scaling curves as an
 artifact. Throughput speedups are only meaningful relative to
 ``host.effective_parallelism``: forced host-platform CPU "devices"
 (JAX_NUM_CPU_DEVICES / --xla_force_host_platform_device_count) share
@@ -18,13 +30,18 @@ container measures dispatch overhead, not scaling — the recorded
 curve is the honest number either way, and on real multi-accelerator
 hosts the same harness prints the real curve.
 
-Pass ``smoke`` as argv[1] (CI) to shrink the populations.
+Modes: no argv = full (sharded curve, streaming curve through 10^6,
+equivalence at 512 devices); ``smoke`` (CI benchmark lane) shrinks
+every population; ``streaming-smoke`` (tier-1 lanes) runs ONLY the
+streaming curve at 10^4 devices + the equivalence check, fast enough
+to ride every PR.
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
+import threading
 import time
 
 import numpy as np
@@ -65,20 +82,167 @@ def _best_time(fn, repeats: int) -> float:
     )
 
 
-def run(sizes=(128, 512), repeats: int = 3, json_path=None):
-    assert_not_interpret()
+class _RssSampler:
+    """Peak resident set size over a code region, sampled from
+    /proc/self/status in a background thread. VmHWM is process-monotone
+    (it never decreases across runs in one process), so per-region
+    peaks need live VmRSS sampling; falls back to the monotone
+    ru_maxrss where /proc is unavailable."""
+
+    def __init__(self, interval: float = 0.05):
+        self.interval = interval
+        self.peak_kib = 0
+        self._stop = threading.Event()
+        self._thread = None
+
+    @staticmethod
+    def _rss_kib() -> int:
+        try:
+            with open("/proc/self/status") as f:
+                for line in f:
+                    if line.startswith("VmRSS:"):
+                        return int(line.split()[1])
+        except OSError:
+            pass
+        import resource
+        return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
+
+    def _sample(self):
+        while not self._stop.is_set():
+            self.peak_kib = max(self.peak_kib, self._rss_kib())
+            self._stop.wait(self.interval)
+
+    def __enter__(self):
+        self.peak_kib = self._rss_kib()
+        self._thread = threading.Thread(target=self._sample, daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._thread.join()
+        self.peak_kib = max(self.peak_kib, self._rss_kib())
+        return False
+
+    @property
+    def peak_mib(self) -> float:
+        return round(self.peak_kib / 1024.0, 1)
+
+
+def _host_info():
+    import jax
+
+    return {
+        "jax_devices": len(jax.devices()),
+        "cpu_count": os.cpu_count(),
+        "effective_parallelism": _effective_parallelism(),
+        "backend": jax.default_backend(),
+    }
+
+
+def run_streaming(sizes=(10_000, 100_000, 1_000_000), chunk: int = 1024):
+    """Devices/sec + peak RSS vs population through the streamed tier.
+
+    The first population also pays the jit warm-up for this workload's
+    bucket shapes; it is recorded as-is (the larger points dominate the
+    curve and are warm)."""
+    from repro.sim import device_stream, iter_population
+
+    config = {"scenario": "quantity_skew", "mean_samples": 16, "dim": 8,
+              "min_samples": 24, "seed": 1, "chunk_devices": chunk,
+              "note": ("small per-device workload: the curve measures the "
+                       "streaming machinery; only the quantity-skew tail "
+                       "clears min_samples and trains")}
+    rows, curve = [], []
+    for m in sizes:
+        stream = device_stream(
+            config["scenario"], n_devices=m, seed=config["seed"],
+            mean_samples=config["mean_samples"], dim=config["dim"],
+            min_samples=config["min_samples"],
+        )
+        eligible = 0
+        with _RssSampler() as rss:
+            t0 = time.perf_counter()
+            for update in iter_population(stream, mode="streamed",
+                                          seed=config["seed"],
+                                          chunk_devices=chunk):
+                eligible += sum(1 for o in update.outcomes if o.report.eligible)
+            secs = time.perf_counter() - t0
+        curve.append({
+            "population": m,
+            "seconds": round(secs, 2),
+            "devices_per_second": round(m / secs, 1),
+            "peak_rss_mib": rss.peak_mib,
+            "eligible_fraction": round(eligible / m, 4),
+        })
+        rows.append(csv_row(
+            f"stream.m{m}", f"{m / secs:.0f}",
+            f"dev/s; peak RSS {rss.peak_mib:.0f} MiB; chunk={chunk}"))
+    return rows, {"config": config, "curve": curve}
+
+
+def run_streamed_equivalence(m: int = 512, chunk: int = 128,
+                             codecs=("fp32", "int8")):
+    """The streamed-vs-bucketed acceptance bar at bench scale: for each
+    scenario the per-device val AUCs must match EXACTLY, and for each
+    scenario x codec the round's ledger byte totals, ensemble AUC
+    table, and distilled student must be identical. Raises on any
+    mismatch — a broken equivalence cannot be silently recorded."""
+    from repro.distill import DistillConfig
+    from repro.sim import PopulationConfig, make_federation, run_population, \
+        train_population
+
+    rows, section = [], {}
+    for scenario in ("iid", "dirichlet", "quantity_skew"):
+        fed = make_federation(scenario, n_devices=m, seed=3, mean_samples=72)
+        a = train_population(fed.dataset, mode="bucketed", seed=3)
+        b = train_population(fed.dataset, mode="streamed", seed=3,
+                             chunk_devices=chunk)
+        dauc = max(
+            abs(x.report.val_auc - y.report.val_auc)
+            for x, y in zip(a.outcomes, b.outcomes)
+        )
+        assert dauc == 0.0, f"{scenario}: per-device val AUC delta {dauc}"
+        rows.append(csv_row(f"stream.equiv.{scenario}.m{m}", f"{dauc:.1e}",
+                            "max |val AUC delta| streamed vs bucketed"))
+        for codec in codecs:
+            base = dict(scenario=scenario, n_devices=m, seed=3,
+                        mean_samples=72, codec=codec, ks=(10,),
+                        strategies=("cv", "random"),
+                        distill=DistillConfig(proxy_size=128, solver="dense",
+                                              proxy="validation"))
+            mat = run_population(PopulationConfig(engine="bucketed", **base),
+                                 federation=fed)
+            strm = run_population(
+                PopulationConfig(engine="streamed", chunk_devices=chunk,
+                                 **base), federation=fed)
+            comm_equal = mat.comm == strm.comm
+            auc_equal = mat.ensemble_auc == strm.ensemble_auc
+            student_equal = np.array_equal(np.asarray(mat.student.coef),
+                                           np.asarray(strm.student.coef))
+            assert comm_equal and auc_equal and student_equal, (
+                f"{scenario}/{codec}: comm={comm_equal} auc={auc_equal} "
+                f"student={student_equal}")
+            section[f"{scenario}.{codec}"] = {
+                "population": m,
+                "per_device_val_auc_delta": float(dauc),
+                "ledger_bytes_equal": comm_equal,
+                "ensemble_auc_equal": auc_equal,
+                "student_bitwise_equal": student_equal,
+            }
+            rows.append(csv_row(
+                f"stream.equiv.{scenario}.{codec}.m{m}", "exact",
+                "ledger bytes + ensemble AUC + student all identical"))
+    return rows, section
+
+
+def run_sharded(sizes=(128, 512), repeats: int = 3):
     import jax
 
     from repro.sim import make_federation, train_population
 
     n_dev = len(jax.devices())
     shard_counts = [1 << i for i in range((n_dev).bit_length()) if 1 << i <= n_dev]
-    host = {
-        "jax_devices": n_dev,
-        "cpu_count": os.cpu_count(),
-        "effective_parallelism": _effective_parallelism(),
-        "backend": jax.default_backend(),
-    }
     rows, results = [], []
 
     for m in sizes:
@@ -128,19 +292,58 @@ def run(sizes=(128, 512), repeats: int = 3, json_path=None):
         rows.append(csv_row(f"shard.equiv.{scenario}.m{m}", f"{dauc:.1e}",
                             "max |val AUC delta| sharded vs bucketed"))
 
+    return rows, results, equivalence
+
+
+def run(sizes=(128, 512), repeats: int = 3, json_path=None,
+        streaming_sizes=(10_000, 100_000, 1_000_000),
+        streaming_chunk: int = 1024, equiv_devices: int = 512,
+        equiv_chunk: int = 128, streaming_only: bool = False):
+    """Compose the bench sections and write the JSON artifact. Called
+    bare by benchmarks/run.py (full mode); the three __main__ modes are
+    parameter presets over this."""
+    assert_not_interpret()
+    payload = {"host": _host_info()}
+    rows = []
+
+    if not streaming_only:
+        shard_rows, results, equivalence = run_sharded(sizes, repeats)
+        rows += shard_rows
+        payload["results"] = results
+        payload["equivalence"] = equivalence
+
+    stream_rows, streaming = run_streaming(streaming_sizes, streaming_chunk)
+    rows += stream_rows
+    payload["streaming"] = streaming
+
+    equiv_rows, streamed_equivalence = run_streamed_equivalence(
+        equiv_devices, equiv_chunk)
+    rows += equiv_rows
+    payload["streamed_equivalence"] = streamed_equivalence
+
     if json_path is None:
         json_path = os.path.join(os.path.dirname(__file__), "shard_bench.json")
     with open(json_path, "w") as f:
-        json.dump({"host": host, "results": results,
-                   "equivalence": equivalence}, f, indent=2)
+        json.dump(payload, f, indent=2)
     rows.append(csv_row("shard.json", json_path, "scaling curve artifact"))
     return rows
 
 
 if __name__ == "__main__":
-    smoke = len(sys.argv) > 1 and sys.argv[1] == "smoke"
+    mode = sys.argv[1] if len(sys.argv) > 1 and not sys.argv[1].startswith("-") \
+        else "full"
     out = None
     if "--out" in sys.argv:
         out = sys.argv[sys.argv.index("--out") + 1]
-    print("\n".join(run(sizes=(64,) if smoke else (128, 512),
-                        repeats=2 if smoke else 3, json_path=out)))
+    if mode == "streaming-smoke":
+        # tier-1 CI lanes: streaming machinery + equivalence only,
+        # fast enough to ride every PR in both mesh lanes
+        print("\n".join(run(json_path=out, streaming_only=True,
+                            streaming_sizes=(10_000,),
+                            equiv_devices=128, equiv_chunk=48)))
+    elif mode == "smoke":
+        print("\n".join(run(sizes=(64,), repeats=2, json_path=out,
+                            streaming_sizes=(2_000, 10_000),
+                            equiv_devices=128, equiv_chunk=48)))
+    else:
+        print("\n".join(run(json_path=out)))

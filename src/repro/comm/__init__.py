@@ -13,13 +13,18 @@ ledger.py   ``CommLedger``: every protocol message (metadata, uploads,
             downloads) as a typed ``CommEvent`` with its exact size
 exchange.py ``ModelExchange``: the shared server-side round plumbing —
             price each model once, pick under the budget, evaluate the
-            decoded models (used by core.protocol and sim.population)
+            decoded models (used by core.protocol and sim.population);
+            ``StreamExchange``: its streaming twin — selection over
+            ``ReportColumns`` scalars, shape-priced budgets
+            (``svm_wire_nbytes``), models regenerated on demand
 budget.py   budget-constrained selection: strategy-rank greedy knapsack
             over encoded sizes, composing with the cv/data/random
             strategies from ``core/selection.py`` (slack budget = no-op)
 channel.py  per-device uplink model (lognormal bandwidth, drop masks,
             round deadlines) — prices payloads in seconds and feeds the
-            availability scenario's participation mask
+            availability scenario's participation mask; ``ChannelStream``
+            derives every device's draws lazily from its device seed,
+            so no population-length arrays exist until ``materialize()``
 
 Codec dispatch policy: the codec is chosen once per round (CLI
 ``--codec``, ``PopulationConfig.codec``, ``run_protocol(codec=...)``)
@@ -27,9 +32,15 @@ and applies to every model upload in that round; metadata and headers
 are codec-independent. ``fp32`` is the lossless reference — with it the
 decoded round is bit-identical to the pre-wire protocol.
 """
-from repro.comm.budget import BudgetedSelection, budgeted_select
-from repro.comm.channel import ChannelModel, make_channel
-from repro.comm.exchange import ModelExchange
+from repro.comm.budget import BudgetedSelection, budgeted_select, pack_ranked
+from repro.comm.channel import (
+    ChannelModel,
+    ChannelStream,
+    calibrated_deadline,
+    make_channel,
+    make_channel_stream,
+)
+from repro.comm.exchange import ModelExchange, StreamExchange
 from repro.comm.ledger import CommEvent, CommLedger
 from repro.comm.wire import (
     CODECS,
@@ -43,15 +54,17 @@ from repro.comm.wire import (
     encoded_nbytes,
     get_codec,
     payload_to_tree,
+    svm_wire_nbytes,
     tree_to_payload,
 )
 
 __all__ = [
-    "BudgetedSelection", "budgeted_select",
-    "ChannelModel", "make_channel",
-    "CommEvent", "CommLedger", "ModelExchange",
+    "BudgetedSelection", "budgeted_select", "pack_ranked",
+    "ChannelModel", "ChannelStream", "calibrated_deadline",
+    "make_channel", "make_channel_stream",
+    "CommEvent", "CommLedger", "ModelExchange", "StreamExchange",
     "CODECS", "Codec", "QuantizedStackedEnsemble", "QuantizedSVM",
     "REPORT_NBYTES", "WIRE_VERSION",
     "decode", "encode", "encoded_nbytes", "get_codec",
-    "payload_to_tree", "tree_to_payload",
+    "payload_to_tree", "svm_wire_nbytes", "tree_to_payload",
 ]

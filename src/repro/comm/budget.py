@@ -42,22 +42,17 @@ class BudgetedSelection:
         return len(self.ids)
 
 
-def budgeted_select(
-    strategy: str,
-    reports: Sequence[DeviceReport],
+def pack_ranked(
+    ranked: Sequence[int],
     k: int,
     sizes: Mapping[int, int],
     budget_bytes: Optional[int] = None,
-    **strategy_kw,
 ) -> BudgetedSelection:
-    """Pick <= k devices whose encoded uploads fit ``budget_bytes``.
-
-    ``sizes`` maps device_id -> exact wire-encoded payload size (from
-    ``repro.comm.wire``); every admissible candidate must be priced.
-    """
-    ranked = select(strategy, reports, len(reports), **strategy_kw)
+    """Greedy pack of an already-ranked candidate list under the byte
+    budget — the knapsack core, shared by the report-based
+    ``budgeted_select`` and the streamed round's column-based picks."""
     if budget_bytes is None:
-        ids = ranked[:k]
+        ids = list(ranked[:k])
         return BudgetedSelection(
             ids, sum(int(sizes[i]) for i in ids), None, tuple(ranked[k:])
         )
@@ -77,3 +72,20 @@ def budgeted_select(
     return BudgetedSelection(
         ids, int(budget_bytes) - remaining, int(budget_bytes), tuple(skipped)
     )
+
+
+def budgeted_select(
+    strategy: str,
+    reports: Sequence[DeviceReport],
+    k: int,
+    sizes: Mapping[int, int],
+    budget_bytes: Optional[int] = None,
+    **strategy_kw,
+) -> BudgetedSelection:
+    """Pick <= k devices whose encoded uploads fit ``budget_bytes``.
+
+    ``sizes`` maps device_id -> exact wire-encoded payload size (from
+    ``repro.comm.wire``); every admissible candidate must be priced.
+    """
+    ranked = select(strategy, reports, len(reports), **strategy_kw)
+    return pack_ranked(ranked, k, sizes, budget_bytes)

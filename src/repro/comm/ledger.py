@@ -18,11 +18,20 @@ Event kinds:
 Tags group events into named quantities (``upload_cv_k10``,
 ``metadata_upload``, ...); ``as_dict()`` sums per tag and is the
 backward-compatible ``ProtocolResult.comm_bytes`` mapping.
+
+A ``CommLedger(compact=True)`` keeps only per-(direction, kind, tag,
+codec) counts and byte totals instead of the event list — fixed host
+memory however many messages are recorded, which is what the streamed
+population round needs (10^6 metadata events would otherwise dominate
+the O(chunk) memory contract). ``record``/``record_batch``, ``total``,
+``as_dict``, ``summary``, and ``len`` behave identically in both
+representations (pinned by tests/test_stream.py); only per-event
+queries (``filter``, iteration) require the full event list.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 DIRECTIONS = ("up", "down")
 KINDS = ("metadata", "model_upload", "ensemble_download", "student_download")
@@ -41,10 +50,38 @@ class CommEvent:
 
 
 class CommLedger:
-    """Append-only record of protocol messages with typed queries."""
+    """Append-only record of protocol messages with typed queries.
 
-    def __init__(self) -> None:
+    ``compact=True`` folds every record into per-(direction, kind, tag,
+    codec) aggregates instead of storing events — O(distinct tags)
+    memory for any message count. Totals and summaries are identical to
+    the event-list representation; ``filter``/iteration are the only
+    queries that need the events and raise in compact mode.
+    """
+
+    def __init__(self, compact: bool = False) -> None:
+        self.compact = bool(compact)
         self.events: List[CommEvent] = []
+        # (direction, kind, tag, codec) -> [message count, byte total]
+        self._agg: Dict[Tuple, List[int]] = {}
+        self._count = 0
+
+    @staticmethod
+    def _validate(direction: str, kind: str, nbytes: int) -> int:
+        if direction not in DIRECTIONS:
+            raise ValueError(f"direction must be one of {DIRECTIONS}, got {direction!r}")
+        if kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+        nbytes = int(nbytes)
+        if nbytes < 0:
+            raise ValueError(f"nbytes must be >= 0, got {nbytes}")
+        return nbytes
+
+    def _fold(self, direction, kind, tag, codec, count, nbytes) -> None:
+        slot = self._agg.setdefault((direction, kind, tag, codec), [0, 0])
+        slot[0] += count
+        slot[1] += nbytes
+        self._count += count
 
     def record(
         self,
@@ -56,21 +93,49 @@ class CommLedger:
         codec: Optional[str] = None,
         tag: str = "",
     ) -> CommEvent:
-        if direction not in DIRECTIONS:
-            raise ValueError(f"direction must be one of {DIRECTIONS}, got {direction!r}")
-        if kind not in KINDS:
-            raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
-        nbytes = int(nbytes)
-        if nbytes < 0:
-            raise ValueError(f"nbytes must be >= 0, got {nbytes}")
+        nbytes = self._validate(direction, kind, nbytes)
         ev = CommEvent(direction, kind, nbytes, device_id=device_id, codec=codec, tag=tag)
-        self.events.append(ev)
+        if self.compact:
+            self._fold(direction, kind, tag, codec, 1, nbytes)
+        else:
+            self.events.append(ev)
         return ev
 
+    def record_batch(
+        self,
+        direction: str,
+        kind: str,
+        nbytes_each: int,
+        count: int,
+        *,
+        codec: Optional[str] = None,
+        tag: str = "",
+    ) -> None:
+        """``count`` same-size messages in one call — the streamed
+        round's metadata exchange records its whole population this way
+        (one fold instead of 10^6 event objects). Equivalent to
+        ``count`` individual ``record`` calls in every total."""
+        nbytes_each = self._validate(direction, kind, nbytes_each)
+        count = int(count)
+        if count < 0:
+            raise ValueError(f"count must be >= 0, got {count}")
+        if self.compact:
+            self._fold(direction, kind, tag, codec, count, count * nbytes_each)
+        else:
+            self.events.extend(
+                CommEvent(direction, kind, nbytes_each, codec=codec, tag=tag)
+                for _ in range(count)
+            )
+
     def __len__(self) -> int:
-        return len(self.events)
+        return self._count if self.compact else len(self.events)
 
     def __iter__(self) -> Iterator[CommEvent]:
+        if self.compact:
+            raise RuntimeError(
+                "compact ledger keeps aggregates, not events; use "
+                "total()/as_dict()/summary()"
+            )
         return iter(self.events)
 
     def filter(
@@ -79,6 +144,11 @@ class CommLedger:
         kind: Optional[str] = None,
         tag: Optional[str] = None,
     ) -> List[CommEvent]:
+        if self.compact:
+            raise RuntimeError(
+                "compact ledger keeps aggregates, not events; use "
+                "total()/as_dict()/summary()"
+            )
         return [
             e for e in self.events
             if (direction is None or e.direction == direction)
@@ -93,11 +163,23 @@ class CommLedger:
         tag: Optional[str] = None,
     ) -> int:
         """Exact byte total over the matching events."""
+        if self.compact:
+            return sum(
+                nbytes for (d, k, t, _), (_, nbytes) in self._agg.items()
+                if (direction is None or d == direction)
+                and (kind is None or k == kind)
+                and (tag is None or t == tag)
+            )
         return sum(e.nbytes for e in self.filter(direction, kind, tag))
 
     def as_dict(self) -> Dict[str, float]:
         """tag -> byte total (the legacy ``comm_bytes`` mapping)."""
         out: Dict[str, float] = {}
+        if self.compact:
+            for (_, kind, tag, _), (_, nbytes) in self._agg.items():
+                key = tag or kind
+                out[key] = out.get(key, 0.0) + float(nbytes)
+            return out
         for e in self.events:
             key = e.tag or e.kind
             out[key] = out.get(key, 0.0) + float(e.nbytes)

@@ -394,6 +394,25 @@ def encoded_nbytes(obj, codec="fp32") -> int:
     return len(encode(obj, codec))
 
 
+def svm_wire_nbytes(n: int, d: int, codec="fp32") -> int:
+    """Exact ``len(encode(SVMModel, codec))`` from the model's SHAPE
+    alone — every codec's payload is shape-deterministic, so the server
+    can price a candidate upload from the 18-byte metadata report
+    (n_train) without the model ever being encoded. The streamed
+    round's budget knapsack packs against these; equality with the
+    encoded length is pinned in tests/test_stream.py."""
+    codec = get_codec(codec)
+    base = _HEADER.size + _SVM_PREFIX.size
+    if codec.name == "fp32":
+        return base + n * d * 4 + n * 4
+    if codec.name == "fp16":
+        return base + n * d * 2 + n * 2
+    if codec.name == "int8":
+        return base + d * 4 + d * 4 + n * d + n * 4
+    m = max(1, int(np.ceil(codec.param * n)))  # topk
+    return base + m * d * 4 + m * 4
+
+
 # the pre-round metadata exchange costs exactly this much per device
 REPORT_NBYTES = len(encode(DeviceReport(0, 0, 0.5, True)))
 

@@ -39,11 +39,13 @@ Local training runs on the ``repro.sim`` engine: ``engine="bucketed"``
 (default) fits whole buckets of devices in vectorized batched-Gram +
 vmap'd-SDCA passes; ``engine="sharded"`` lays the same buckets across
 all local accelerators (bitwise-identical results — see
-tests/test_engines.py); ``engine="loop"`` is the original sequential
-path, kept as the oracle for equivalence tests. Per-device randomness
-is derived via ``derive_device_seed`` in every mode, so results are
-bit-reproducible regardless of device iteration order, batching, or
-mesh shape.
+tests/test_engines.py); ``engine="streamed"`` trains through the lazy
+chunked tier (same per-device math — here the dataset is already
+materialized, so it only bounds accelerator batches);
+``engine="loop"`` is the original sequential path, kept as the oracle
+for equivalence tests. Per-device randomness is derived via
+``derive_device_seed`` in every mode, so results are bit-reproducible
+regardless of device iteration order, batching, or mesh shape.
 """
 from __future__ import annotations
 

@@ -39,13 +39,16 @@ def distill_round(
     ledger,
     dim: Optional[int] = None,
     default_proxy_params: Optional[Mapping] = None,
+    split_counts=None,
+    fetch_split=None,
 ) -> DistilledRound:
     """Proxy draw -> solve -> wire -> ledger, for one round.
 
     ``default_proxy_params`` backstop the config's ``proxy_params``
     (the population runner defaults the ``scenario`` source to its own
     federation); the student download codec defaults to the round's
-    upload codec.
+    upload codec. Streamed rounds pass ``devices=None`` plus the lazy
+    ``split_counts``/``fetch_split`` pair (see ``proxy.ProxyContext``).
     """
     from repro.comm import decode, encode  # deferred: comm <-> core cycle
 
@@ -53,7 +56,9 @@ def distill_round(
     for key, val in dict(default_proxy_params or {}).items():
         params.setdefault(key, val)
     proxy = make_proxy(cfg.proxy, n=cfg.proxy_size, rng=distill_rng(seed),
-                       devices=devices, dim=dim, **params)
+                       devices=devices, dim=dim,
+                       split_counts=split_counts, fetch_split=fetch_split,
+                       **params)
     student = distill_teacher(teacher_predict, proxy, cfg=cfg, seed=seed)
     codec = cfg.codec or round_codec
     wire = encode(student, codec)

@@ -22,6 +22,15 @@ mesh; results are bitwise-identical to the bucketed tier).
       --scenario dirichlet --devices 512 --k 10 50
   PYTHONPATH=src python -m repro.launch.fed_run --mode sim \
       --scenario dirichlet --devices 4096 --engine sharded --mesh 4
+  PYTHONPATH=src python -m repro.launch.fed_run --mode sim \
+      --scenario dirichlet --devices 1000000 --engine streamed \
+      --chunk-devices 1024
+
+``--engine streamed`` never materializes the federation: devices are
+generated lazily from their per-device seeds, trained in
+``--chunk-devices``-sized chunks, and folded into scalar columns, so
+peak host memory is O(chunk) however large ``--devices`` is — with
+results identical to the materialized engines.
 
 Sim-mode uploads go through the ``repro.comm`` wire (``--codec fp32 |
 fp16 | int8 | topk[:ratio]``) with an optional per-selection byte cap
@@ -79,6 +88,7 @@ def run_sim(args) -> dict:
         ks=tuple(args.k),
         engine=args.engine,
         mesh_shards=args.mesh,
+        chunk_devices=args.chunk_devices,
         scenario_params=params,
         codec=args.codec,
         budget_bytes=args.budget_bytes,
@@ -142,13 +152,17 @@ def main(argv=None):
     ap.add_argument("--mean-samples", type=int, default=80, help="sim mode")
     ap.add_argument("--k", type=int, nargs="+", default=[10], help="sim mode")
     ap.add_argument("--engine", default="bucketed",
-                    choices=["bucketed", "sharded", "loop"],
+                    choices=["bucketed", "sharded", "loop", "streamed"],
                     help="sim mode: bucketed (one device) | sharded "
                          "(mesh-parallel across local accelerators) | "
-                         "loop (sequential oracle)")
+                         "loop (sequential oracle) | streamed (lazy "
+                         "chunked federation, O(chunk) host memory)")
     ap.add_argument("--mesh", type=int, default=None,
                     help="sim mode, --engine sharded: cap the sim mesh "
                          "at this many devices (default: all local)")
+    ap.add_argument("--chunk-devices", type=int, default=1024,
+                    help="sim mode, --engine streamed: devices resident "
+                         "at once (peak host memory is O(this))")
     ap.add_argument("--scenario-param", action="append", default=[],
                     metavar="KEY=VALUE", help="sim mode: e.g. alpha=0.1")
     ap.add_argument("--codec", default="fp32",

@@ -6,12 +6,17 @@ engine.py      device-parallel local training: bucketed batched-Gram +
                sequential loop survives as `mode="loop"`, the oracle
                for equivalence tests; `mode="sharded"` lays the same
                bucket groups over the local accelerator mesh with
-               shard_map (bitwise-equal to bucketed, tests/test_engines)
+               shard_map (bitwise-equal to bucketed, tests/test_engines);
+               `mode="streamed"` consumes a lazy DeviceStream in bounded
+               chunks — O(chunk) host memory, same per-device results
 scenarios.py   registry of named, seedable federation generators (IID,
                Dirichlet label skew, quantity skew, feature shift,
-               temporal drift, availability/straggler masks)
+               temporal drift, availability/straggler masks), each
+               exposed lazily as a `DeviceStream` (`device_stream`) and
+               materialized as a `Federation` (`make_federation`)
 population.py  scenario -> engine -> selection -> capped ensemble eval,
-               with streaming progress callbacks
+               with streaming progress callbacks; `engine="streamed"`
+               runs the whole round in fixed host memory
 
 The faithful paper round (`repro.core.run_protocol`) rides the same
 engine; this package adds the scale and scenario axes on top.
@@ -25,11 +30,14 @@ from repro.sim.engine import (
     make_shard_ctx,
     train_device,
     train_population,
+    train_selected,
 )
 from repro.sim.scenarios import (
+    DeviceStream,
     Federation,
     SCENARIOS,
     ScenarioSpec,
+    device_stream,
     list_scenarios,
     make_federation,
     register_scenario,
@@ -39,7 +47,8 @@ from repro.sim.population import PopulationConfig, PopulationReport, run_populat
 __all__ = [
     "DeviceOutcome", "GroupUpdate", "PopulationResult", "ShardCtx",
     "iter_population", "make_shard_ctx", "train_device", "train_population",
-    "Federation", "SCENARIOS", "ScenarioSpec",
-    "list_scenarios", "make_federation", "register_scenario",
+    "train_selected",
+    "DeviceStream", "Federation", "SCENARIOS", "ScenarioSpec",
+    "device_stream", "list_scenarios", "make_federation", "register_scenario",
     "PopulationConfig", "PopulationReport", "run_population",
 ]

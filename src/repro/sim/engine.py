@@ -1,6 +1,6 @@
 """Device-parallel local training engine (population-scale simulation).
 
-Three tiers, each the oracle for the next (docs/TESTING.md):
+Four tiers, each the oracle for the next (docs/TESTING.md):
 
   mode="loop"      sequential per-device oracle: one Gram, one SDCA
                    solve, one scoring pass per device
@@ -9,6 +9,10 @@ Three tiers, each the oracle for the next (docs/TESTING.md):
                    (`launch.mesh.make_sim_mesh`, 1-D ``devices`` axis)
                    with `shard_map` — pure data parallelism over the
                    group axis, one gather at the aggregation barrier
+  mode="streamed"  the bucketed passes over BOUNDED CHUNKS of a lazy
+                   `DeviceStream` — devices are generated, trained, and
+                   released chunk by chunk, so peak host memory is
+                   O(chunk_devices), not O(population)
 
 The paper's round trains every device's RBF-SVM independently — which
 the sequential loop dispatches one device at a time. At hundreds-to-
@@ -52,6 +56,20 @@ there the agreement is tight float tolerance). tests/test_engines.py
 holds both bars, on 1-shard degenerate meshes and real multi-device
 splits alike. Per-device streaming evaluation composes through the
 merge-able accumulators in `utils.metrics`.
+
+`mode="streamed"` consumes a lazy `scenarios.DeviceStream` in bounded
+chunks (``chunk_devices``), running the SAME per-device classification,
+bucketing, padding, and fit/score math as the bucketed tier — only the
+group COMPOSITION differs (chunk-local buckets instead of population-
+global ones). Per-device splits and seeds depend only on the device id,
+and per-device results are invariant to group composition (the
+grouping-invariance bar in tests/test_engines.py), so the streamed tier
+matches the bucketed tier per device while holding O(chunk) devices in
+memory at once. Callers that drain it into a `PopulationResult` give
+that bound back; the streaming round in `sim.population` folds instead.
+`train_selected` regenerates only a chosen id set through the same
+math — the server-side path that rebuilds just the k selected models
+after a streamed selection pass.
 """
 from __future__ import annotations
 
@@ -342,8 +360,48 @@ def _train_bucket_group(
     return outcomes
 
 
+def _classify_device(dev_id, dev, min_samples, seed=0):
+    """Shared per-device triage: split, then constant-fallback or the
+    (bucket, splits) pair the SDCA path will train. Identical in every
+    engine tier — the root of cross-tier equivalence."""
+    splits = _split_device(dev_id, dev, seed)
+    tr = splits["train"]
+    if dev.n < min_samples or len(np.unique(tr.y)) < 2:
+        return None, _constant_outcome(dev_id, splits)
+    bucket = max(-(-tr.n // SDCA_BUCKET) * SDCA_BUCKET, SDCA_BUCKET)
+    return bucket, splits
+
+
+def _bucket_group_caps(bucket, group_cap, shard):
+    """Power-of-two group chunk size under the Gram memory budget.
+
+    The budget is PER DEVICE: a sharded run holds 1/n_shards of each
+    group per accelerator, so its groups grow n_shards x larger at the
+    same per-device footprint (fewer dispatches)."""
+    budget = GRAM_ELEM_BUDGET * (shard.n_shards if shard else 1)
+    cap = max(1, min(group_cap, budget // (bucket * bucket)))
+    return 1 << (cap.bit_length() - 1)
+
+
+def _train_buckets(by_bucket, lam, epochs, group_cap, shard):
+    """Yield (bucket, outcomes, seconds) for every bucket group, caps
+    floored to powers of two so `_train_bucket_group`'s pow2 group
+    padding cannot overshoot the Gram memory budget; huge buckets
+    (rare, giant devices) drop below 8 per group."""
+    for bucket in sorted(by_bucket):
+        members = by_bucket[bucket]
+        cap = _bucket_group_caps(bucket, group_cap, shard)
+        for lo in range(0, len(members), cap):
+            t0 = time.time()
+            outs = _train_bucket_group(
+                members[lo : lo + cap], bucket, lam, epochs,
+                pad_floor=min(8, cap), shard=shard,
+            )
+            yield bucket, outs, time.time() - t0
+
+
 def iter_population(
-    dataset: FederatedDataset,
+    dataset,
     *,
     lam: float = 0.01,
     seed: int = 0,
@@ -353,20 +411,58 @@ def iter_population(
     group_cap: int = 256,
     available: Optional[np.ndarray] = None,
     shards: Optional[int] = None,
+    chunk_devices: int = 1024,
 ) -> Iterator[GroupUpdate]:
     """Train a device population, streaming one GroupUpdate per batch.
 
+    ``dataset`` is a materialized `FederatedDataset` or (for
+    ``mode="streamed"``; accepted everywhere) a lazy
+    `scenarios.DeviceStream`. Passing a stream to a materializing mode
+    realizes it first; passing a dataset to the streamed mode wraps it
+    — the streamed tier then bounds ACCELERATOR batches but host memory
+    is already O(population).
+
     ``available`` (optional bool mask, len n_devices) drops absent
-    devices entirely — they neither train nor report (the scenario
-    registry's availability masks plug in here).
+    devices entirely — they neither train nor report. A stream's own
+    lazy availability mask composes with it (logical AND).
 
     ``mode="sharded"`` runs the bucketed passes mesh-parallel across
     local accelerators (``shards`` caps how many; default all — see
     ``make_shard_ctx``). Bucketing, seeds, and padding are identical to
     ``"bucketed"``, so the two tiers produce the same federation.
+
+    ``mode="streamed"`` generates, trains, and releases devices in
+    ``chunk_devices``-sized chunks: peak host memory is O(chunk), and
+    per-device results still match the bucketed tier (chunk-local
+    bucketing only changes group composition, which per-device results
+    are invariant to). Pass ``shards`` to run each chunk's passes
+    mesh-parallel as well.
     """
-    if mode not in ("bucketed", "loop", "sharded"):
+    from repro.sim.scenarios import DeviceStream
+
+    if mode not in ("bucketed", "loop", "sharded", "streamed"):
         raise ValueError(f"unknown engine mode {mode!r}")
+
+    if mode == "streamed":
+        if isinstance(dataset, DeviceStream):
+            stream = dataset
+        else:
+            stream = _dataset_as_stream(dataset)
+        yield from _iter_streamed(
+            stream, lam=lam, seed=seed,
+            min_samples=stream.min_samples if min_samples is None else min_samples,
+            epochs=epochs, group_cap=group_cap, available=available,
+            shards=shards, chunk_devices=chunk_devices,
+        )
+        return
+
+    if isinstance(dataset, DeviceStream):
+        fed = dataset.materialize()
+        mask = np.asarray(fed.available)
+        if available is not None:
+            mask = mask & np.asarray(available, bool)
+        dataset, available = fed.dataset, mask
+
     shard = make_shard_ctx(shards, epochs) if mode == "sharded" else None
     min_samples = dataset.min_samples if min_samples is None else min_samples
     ids = [
@@ -393,37 +489,111 @@ def iter_population(
     fallback: List[DeviceOutcome] = []
     by_bucket: Dict[int, List[tuple]] = {}
     for i in ids:
-        dev = dataset.devices[i]
-        splits = _split_device(i, dev, seed)
-        tr = splits["train"]
-        if dev.n < min_samples or len(np.unique(tr.y)) < 2:
-            fallback.append(_constant_outcome(i, splits))
+        bucket, payload = _classify_device(i, dataset.devices[i], min_samples,
+                                           seed=seed)
+        if bucket is None:
+            fallback.append(payload)
         else:
-            bucket = max(-(-tr.n // SDCA_BUCKET) * SDCA_BUCKET, SDCA_BUCKET)
-            by_bucket.setdefault(bucket, []).append((i, splits))
+            by_bucket.setdefault(bucket, []).append((i, payload))
     if fallback:
         done += len(fallback)
         yield GroupUpdate(0, fallback, time.time() - t0, done, total)
 
-    for bucket in sorted(by_bucket):
-        members = by_bucket[bucket]
-        # floor to a power of two so the pow2 group padding inside
-        # _train_bucket_group cannot overshoot the Gram memory budget;
-        # huge buckets (rare, giant devices) drop below 8 per group.
-        # The Gram budget is PER DEVICE: a sharded run holds 1/n_shards
-        # of each group per accelerator, so its groups grow n_shards x
-        # larger at the same per-device footprint (fewer dispatches).
-        budget = GRAM_ELEM_BUDGET * (shard.n_shards if shard else 1)
-        cap = max(1, min(group_cap, budget // (bucket * bucket)))
-        cap = 1 << (cap.bit_length() - 1)
-        for lo in range(0, len(members), cap):
-            t0 = time.time()
-            outs = _train_bucket_group(
-                members[lo : lo + cap], bucket, lam, epochs,
-                pad_floor=min(8, cap), shard=shard,
-            )
+    for bucket, outs, secs in _train_buckets(by_bucket, lam, epochs,
+                                             group_cap, shard):
+        done += len(outs)
+        yield GroupUpdate(bucket, outs, secs, done, total)
+
+
+def _dataset_as_stream(dataset: FederatedDataset):
+    """View a materialized dataset through the stream interface."""
+    from repro.sim.scenarios import DeviceStream, ScenarioSpec
+
+    spec = ScenarioSpec(
+        name=dataset.name, n_devices=dataset.n_devices,
+        dim=dataset.dim, min_samples=dataset.min_samples,
+    )
+    return DeviceStream(spec=spec, gen=lambda i: dataset.devices[i])
+
+
+def _iter_streamed(
+    stream, *, lam, seed, min_samples, epochs, group_cap, available,
+    shards, chunk_devices,
+) -> Iterator[GroupUpdate]:
+    if chunk_devices < 1:
+        raise ValueError(f"chunk_devices must be >= 1, got {chunk_devices}")
+    shard = make_shard_ctx(shards, epochs) if shards is not None else None
+
+    def admitted(i: int) -> bool:
+        if available is not None and not bool(available[i]):
+            return False
+        return stream.available(i)
+
+    if available is None:
+        total = stream.count_available()
+    else:
+        total = sum(1 for i in range(stream.n_devices) if admitted(i))
+    done = 0
+
+    for lo in range(0, stream.n_devices, chunk_devices):
+        t0 = time.time()
+        fallback: List[DeviceOutcome] = []
+        by_bucket: Dict[int, List[tuple]] = {}
+        for i in range(lo, min(lo + chunk_devices, stream.n_devices)):
+            if not admitted(i):
+                continue
+            bucket, payload = _classify_device(i, stream.device(i),
+                                               min_samples, seed=seed)
+            if bucket is None:
+                fallback.append(payload)
+            else:
+                by_bucket.setdefault(bucket, []).append((i, payload))
+        if fallback:
+            done += len(fallback)
+            yield GroupUpdate(0, fallback, time.time() - t0, done, total)
+        for bucket, outs, secs in _train_buckets(by_bucket, lam, epochs,
+                                                 group_cap, shard):
             done += len(outs)
-            yield GroupUpdate(bucket, outs, time.time() - t0, done, total)
+            yield GroupUpdate(bucket, outs, secs, done, total)
+        # the chunk's devices die with these locals on the next pass —
+        # nothing population-sized is ever retained here
+
+
+def train_selected(
+    stream,
+    ids,
+    *,
+    lam: float = 0.01,
+    seed: int = 0,
+    min_samples: Optional[int] = None,
+    epochs: int = 20,
+    group_cap: int = 256,
+    shards: Optional[int] = None,
+) -> Dict[int, DeviceOutcome]:
+    """Regenerate and train ONLY the given device ids from a stream.
+
+    The server-side rebuild after a streamed selection pass: with k
+    winners out of a 10^6-device population, this touches k devices
+    instead of re-streaming everyone. Same classification, bucketing,
+    and fit/score math as every other tier, so the outcomes equal what
+    the full pass produced for those ids (group-composition invariance
+    again).
+    """
+    min_samples = stream.min_samples if min_samples is None else min_samples
+    shard = make_shard_ctx(shards, epochs) if shards is not None else None
+    out: Dict[int, DeviceOutcome] = {}
+    by_bucket: Dict[int, List[tuple]] = {}
+    for i in sorted(set(int(i) for i in ids)):
+        bucket, payload = _classify_device(i, stream.device(i), min_samples,
+                                           seed=seed)
+        if bucket is None:
+            out[payload.device_id] = payload
+        else:
+            by_bucket.setdefault(bucket, []).append((i, payload))
+    for _, outs, _ in _train_buckets(by_bucket, lam, epochs, group_cap, shard):
+        for o in outs:
+            out[o.device_id] = o
+    return out
 
 
 def train_population(

@@ -19,16 +19,25 @@ onto the ledger, and reported under ``ensemble_auc["distilled"]``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
-from typing import Callable, Dict, Mapping, Optional, Sequence
+from typing import Callable, Dict, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.comm import CommLedger, ModelExchange
+from repro.comm import CommLedger, ModelExchange, StreamExchange
 from repro.core.ensemble import Ensemble
+from repro.core.selection import ReportColumns
 from repro.distill import DistillConfig, distill_round
-from repro.sim.engine import GroupUpdate, train_population
-from repro.sim.scenarios import Federation, make_federation
+from repro.sim.engine import (
+    GroupUpdate,
+    _dataset_as_stream,
+    _split_device,
+    iter_population,
+    train_population,
+    train_selected,
+)
+from repro.sim.scenarios import DeviceStream, Federation, device_stream, make_federation
 from repro.utils.metrics import streaming_grouped_auc
 from repro.utils.logging import get_logger
 
@@ -46,8 +55,9 @@ class PopulationConfig:
     scenario_params: Mapping = dataclasses.field(default_factory=dict)
     # training
     lam: float = 0.01
-    engine: str = "bucketed"        # "bucketed" | "sharded" | "loop" (oracle)
+    engine: str = "bucketed"        # "bucketed" | "sharded" | "loop" | "streamed"
     mesh_shards: Optional[int] = None  # sharded engine: mesh size cap (None = all local devices)
+    chunk_devices: int = 1024       # streamed engine: devices resident at once
     # selection + evaluation
     ks: Sequence[int] = (10,)
     strategies: Sequence[str] = ("cv", "data", "random")
@@ -96,15 +106,40 @@ class PopulationReport:
 
 def run_population(
     cfg: PopulationConfig,
-    federation: Optional[Federation] = None,
+    federation: Optional[Union[Federation, DeviceStream]] = None,
     on_update: Optional[Callable[[GroupUpdate], None]] = None,
 ) -> PopulationReport:
     """Simulate one one-shot round at population scale.
 
-    Pass a prebuilt ``federation`` to reuse data across engine modes
-    (the benchmark does); otherwise the scenario registry builds it
-    from the config.
+    Pass a prebuilt ``federation`` (a materialized ``Federation`` or a
+    lazy ``DeviceStream`` — either works with any engine) to reuse data
+    across engine modes (the benchmark does); otherwise the scenario
+    registry builds it from the config.
+
+    ``engine="streamed"`` runs the fixed-host-memory round: devices are
+    generated, trained, and released in ``chunk_devices``-sized chunks,
+    the server folds their scalar reports into ``ReportColumns``, and
+    only the devices a selection actually picks are regenerated for
+    upload/ensembling (``_run_streamed``). Reports from the streamed
+    and materialized paths agree exactly — per-device AUCs, ledger byte
+    totals, distilled students (tests/test_engines.py,
+    tests/test_stream.py).
     """
+    if cfg.engine == "streamed":
+        if federation is None:
+            stream = device_stream(
+                cfg.scenario, n_devices=cfg.n_devices, seed=cfg.seed,
+                mean_samples=cfg.mean_samples, dim=cfg.dim,
+                min_samples=cfg.min_samples, **dict(cfg.scenario_params),
+            )
+        elif isinstance(federation, DeviceStream):
+            stream = federation
+        else:
+            stream = _federation_as_stream(federation)
+        return _run_streamed(cfg, stream, on_update)
+
+    if isinstance(federation, DeviceStream):
+        federation = federation.materialize()
     if federation is None:
         federation = make_federation(
             cfg.scenario, n_devices=cfg.n_devices, seed=cfg.seed,
@@ -216,6 +251,190 @@ def run_population(
         time_to_aggregate=(
             time_to_aggregate if federation.channel is not None else {}
         ),
+        ledger=ledger,
+        student=student,
+        student_codec=student_codec,
+    )
+
+
+def _federation_as_stream(fed: Federation) -> DeviceStream:
+    """View a materialized federation through the stream interface: the
+    dataset serves devices by index, the availability mask becomes the
+    per-device predicate, and the channel rides along for round-latency
+    pricing (``ChannelModel`` and ``ChannelStream`` share
+    ``time_to_aggregate``)."""
+    avail = np.asarray(fed.available, bool)
+    return dataclasses.replace(
+        _dataset_as_stream(fed.dataset),
+        available_fn=lambda i: bool(avail[i]),
+        channel=fed.channel,
+    )
+
+
+def _run_streamed(
+    cfg: PopulationConfig,
+    stream: DeviceStream,
+    on_update: Optional[Callable[[GroupUpdate], None]] = None,
+) -> PopulationReport:
+    """The one-shot round with O(chunk) peak host memory.
+
+    Pass 1 streams the whole population through the engine in bounded
+    chunks, folding each device down to a few scalars (id, split
+    counts, val AUC, eligibility, local test AUC) the moment it is
+    trained — models and data die with their chunk. Everything after —
+    selection, budget packing, ensemble eval, channel latency,
+    distillation — runs off those columns plus on-demand regeneration
+    of the O(k + eval_cap) devices actually touched
+    (``engine.train_selected`` for models, ``_split_device`` for eval
+    splits, the lazy proxy hooks for distillation). Every reported
+    number matches the materialized round exactly.
+    """
+    ids_l: list = []
+    n_train_l: list = []
+    val_auc_l: list = []
+    elig_l: list = []
+    n_val_l: list = []
+    local_auc_l: list = []
+
+    t0 = time.time()
+    for update in iter_population(
+        stream, lam=cfg.lam, seed=cfg.seed, mode="streamed",
+        shards=cfg.mesh_shards, chunk_devices=cfg.chunk_devices,
+    ):
+        for o in update.outcomes:
+            r = o.report
+            ids_l.append(r.device_id)
+            n_train_l.append(r.n_train)
+            val_auc_l.append(r.val_auc)
+            elig_l.append(r.eligible)
+            n_val_l.append(o.splits["val"].n)
+            local_auc_l.append(o.local_test_auc)
+        if on_update is not None:
+            on_update(update)
+    train_s = time.time() - t0
+
+    # outcomes arrive fallback-first within each chunk; id order (the
+    # materialized round's canonical order) is restored here so every
+    # downstream mean/sort/draw consumes identical sequences
+    ids_a = np.asarray(ids_l, np.int64)
+    order = np.argsort(ids_a)
+    cols = ReportColumns(
+        ids=ids_a[order],
+        n_train=np.asarray(n_train_l, np.int64)[order],
+        val_auc=np.asarray(val_auc_l, np.float64)[order],
+        eligible=np.asarray(elig_l, bool)[order],
+    )
+    n_val = np.asarray(n_val_l, np.int64)[order]
+    local_auc = np.asarray(local_auc_l, np.float64)[order]
+    name = f"sim:{stream.spec.name}"
+    log.info("streamed %d devices in %.2fs (chunk=%d)",
+             len(cols), train_s, cfg.chunk_devices)
+
+    def provider(want: Sequence[int]) -> Dict[int, object]:
+        outs = train_selected(stream, want, lam=cfg.lam, seed=cfg.seed,
+                              shards=cfg.mesh_shards)
+        return {i: o.model for i, o in outs.items()}
+
+    ex = StreamExchange(cols, provider, dim=stream.dim, codec=cfg.codec,
+                        budget_bytes=cfg.budget_bytes)
+    ledger = CommLedger(compact=True)
+    ex.record_metadata(ledger)
+
+    # seeded, capped eval subsample — the same draw as the materialized
+    # round; only these <= eval_device_cap devices' splits are rebuilt
+    rng = np.random.default_rng(cfg.seed + 101)
+    eval_ids = [int(i) for i in cols.ids]
+    if len(eval_ids) > cfg.eval_device_cap:
+        eval_ids = sorted(rng.choice(eval_ids, cfg.eval_device_cap, replace=False))
+    eval_splits = {
+        int(i): _split_device(int(i), stream.device(int(i)), cfg.seed)
+        for i in eval_ids
+    }
+
+    def mean_auc(predict_fn) -> float:
+        ga = streaming_grouped_auc(
+            predict_fn,
+            ((i, eval_splits[int(i)]["test"].x, eval_splits[int(i)]["test"].y)
+             for i in eval_ids),
+            chunk=cfg.eval_chunk,
+        )
+        return ga.mean()
+
+    channel = stream.channel
+    ensemble_auc: Dict[str, Dict[int, float]] = {}
+    time_to_aggregate: Dict[str, Dict[int, float]] = {}
+    for strat in cfg.strategies:
+        ensemble_auc[strat] = {}
+        time_to_aggregate[strat] = {}
+        for k in cfg.ks:
+            ids = ex.pick(strat, k, cfg.seed)
+            if not ids:
+                continue
+            ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
+            ens = Ensemble([ex.received(i) for i in ids])
+            ensemble_auc[strat][k] = mean_auc(
+                partial(ens.predict, chunk=cfg.eval_chunk)
+            )
+            if channel is not None:
+                time_to_aggregate[strat][k] = channel.time_to_aggregate(
+                    {i: len(ex.upload(i)) for i in ids}
+                )
+        log.info("%s/%s: %s", name, strat, ensemble_auc[strat])
+
+    student = None
+    student_codec = None
+    best_cells = {
+        (s, k): auc for s, v in ensemble_auc.items() for k, auc in v.items()
+    }
+    if cfg.distill is not None and cfg.distill.proxy_size > 0 and best_cells:
+        best_strat, best_k = max(best_cells, key=best_cells.get)
+        ids = ex.pick(best_strat, best_k, cfg.seed)
+        ens = Ensemble([ex.received(i) for i in ids])
+        defaults = {}
+        if cfg.distill.proxy == "scenario":
+            defaults = {"scenario": cfg.scenario,
+                        "mean_samples": cfg.mean_samples,
+                        **dict(cfg.scenario_params)}
+
+        # lazy proxy hooks: per-device split row counts in id order +
+        # on-demand row fetch (see distill.proxy.ProxyContext)
+        split_counts = {"train": cols.n_train, "val": n_val}
+
+        def fetch_split(split: str, positions: Sequence[int]) -> Dict[int, np.ndarray]:
+            want = {int(p): int(cols.ids[int(p)]) for p in positions}
+            regen = {
+                i: _split_device(i, stream.device(i), cfg.seed)
+                for i in sorted(set(want.values()))
+            }
+            return {p: regen[i][split].x for p, i in want.items()}
+
+        dr = distill_round(ens.predict, None, cfg.distill, cfg.seed,
+                           ex.codec, ledger, dim=cfg.dim,
+                           default_proxy_params=defaults,
+                           split_counts=split_counts, fetch_split=fetch_split)
+        student, student_codec = dr.student, dr.codec
+        ensemble_auc["distilled"] = {
+            best_k: mean_auc(partial(student.predict, chunk=cfg.eval_chunk))
+        }
+        log.info("%s/distilled (solver=%s, proxy=%s, codec=%s): %s",
+                 name, cfg.distill.solver, cfg.distill.proxy,
+                 student_codec, ensemble_auc["distilled"])
+
+    return PopulationReport(
+        scenario=cfg.scenario,
+        n_devices=stream.n_devices,
+        n_available=len(cols),
+        n_eligible=int(cols.eligible.sum()),
+        mean_local_auc=float(np.mean(local_auc)) if len(cols) else 0.5,
+        mean_val_auc=float(np.mean(cols.val_auc)) if len(cols) else 0.5,
+        ensemble_auc=ensemble_auc,
+        train_seconds=train_s,
+        devices_per_second=len(cols) / max(train_s, 1e-9),
+        eval_devices=len(eval_ids),
+        codec=ex.codec,
+        budget_bytes=cfg.budget_bytes,
+        comm=ledger.summary(),
+        time_to_aggregate=time_to_aggregate if channel is not None else {},
         ledger=ledger,
         student=student,
         student_codec=student_codec,

@@ -1,21 +1,25 @@
-"""Cross-engine differential suite: the three engine tiers must agree.
+"""Cross-engine differential suite: the four engine tiers must agree.
 
 The oracle ladder (docs/TESTING.md): ``loop`` is the sequential
 per-device oracle, ``bucketed`` vectorizes whole cohorts on one
-accelerator, ``sharded`` lays the same cohorts over the sim mesh. For
-one seed the three tiers must produce the same federation — per-device
-AUCs, ledger byte totals, and distilled student — across scenarios and
-wire codecs. On a single-device host the sharded tier runs a 1-shard
+accelerator, ``sharded`` lays the same cohorts over the sim mesh,
+``streamed`` consumes a lazy DeviceStream in bounded chunks. For one
+seed the tiers must produce the same federation — per-device AUCs,
+ledger byte totals, and distilled student — across scenarios and wire
+codecs. On a single-device host the sharded tier runs a 1-shard
 degenerate mesh; the forced multi-device CI lane (JAX_NUM_CPU_DEVICES /
 --xla_force_host_platform_device_count) re-runs this file with real
 shard splits.
 
-Equality bars: per-device AUCs agree EXACTLY across all three tiers on
-any mesh (rank statistics absorb accumulation-order noise in the
-scores). Models/scores additionally agree BITWISE between bucketed and
-sharded on the meshes CI pins (1-4 shards, where per-shard batches
-keep the bucketed op shapes); on larger meshes XLA may re-associate
-the per-shard reductions, so there the bar is tight float tolerance.
+Equality bars: per-device AUCs agree EXACTLY across all tiers on any
+mesh (rank statistics absorb accumulation-order noise in the scores).
+Models/scores additionally agree BITWISE between bucketed and sharded
+on the meshes CI pins (1-4 shards, where per-shard batches keep the
+bucketed op shapes); on larger meshes XLA may re-associate the
+per-shard reductions, so there the bar is tight float tolerance. The
+streamed tier runs the bucketed ops unsharded, so its bar is BITWISE
+everywhere — chunk-local group composition is the only difference, and
+per-device results are invariant to grouping (pinned below).
 """
 import functools
 
@@ -44,11 +48,12 @@ def assert_scores_equal(a, b, atol=1e-5):
     else:
         np.testing.assert_allclose(a, b, atol=atol)
 
-ENGINES = ("loop", "bucketed", "sharded")
+ENGINES = ("loop", "bucketed", "sharded", "streamed")
 SCENARIOS = ("iid", "dirichlet", "quantity_skew")
 CODECS = ("fp32", "int8")
 N_DEVICES = 14
 SEED = 3
+CHUNK = 5  # streamed tier: small enough that every scenario spans chunks
 
 
 @functools.lru_cache(maxsize=None)
@@ -60,7 +65,7 @@ def _federation(scenario):
 @functools.lru_cache(maxsize=None)
 def _trained(scenario, engine):
     return train_population(_federation(scenario).dataset, mode=engine,
-                            seed=SEED)
+                            seed=SEED, chunk_devices=CHUNK)
 
 
 @functools.lru_cache(maxsize=None)
@@ -68,7 +73,7 @@ def _report(scenario, codec, engine):
     cfg = PopulationConfig(
         scenario=scenario, n_devices=N_DEVICES, seed=SEED, mean_samples=55,
         min_samples=40, engine=engine, codec=codec, ks=(3,),
-        strategies=("cv", "random"),
+        strategies=("cv", "random"), chunk_devices=CHUNK,
         distill=DistillConfig(proxy_size=48, solver="dense", proxy="validation"),
     )
     return run_population(cfg, federation=_federation(scenario))
@@ -79,7 +84,7 @@ def _report(scenario, codec, engine):
 # ----------------------------------------------------------------------
 
 @pytest.mark.parametrize("scenario", SCENARIOS)
-@pytest.mark.parametrize("engine", ("bucketed", "sharded"))
+@pytest.mark.parametrize("engine", ("bucketed", "sharded", "streamed"))
 def test_per_device_aucs_match_loop_exactly(scenario, engine):
     oracle, cand = _trained(scenario, "loop"), _trained(scenario, engine)
     assert [o.device_id for o in oracle.outcomes] == [o.device_id for o in cand.outcomes]
@@ -105,6 +110,24 @@ def test_sharded_is_bitwise_identical_to_bucketed(scenario):
             assert x.model.gamma == y.model.gamma
 
 
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_streamed_is_bitwise_identical_to_bucketed(scenario):
+    """The streamed tier runs the bucketed ops with chunk-local group
+    composition only — per-device grouping invariance makes it bitwise
+    on ANY host, no mesh caveat."""
+    b, s = _trained(scenario, "bucketed"), _trained(scenario, "streamed")
+    assert [o.device_id for o in b.outcomes] == [o.device_id for o in s.outcomes]
+    for x, y in zip(b.outcomes, s.outcomes):
+        assert type(x.model) is type(y.model)
+        np.testing.assert_array_equal(x.val_scores, y.val_scores)
+        np.testing.assert_array_equal(x.local_test_scores, y.local_test_scores)
+        assert x.report.val_auc == y.report.val_auc
+        if hasattr(x.model, "coef"):
+            np.testing.assert_array_equal(x.model.coef, y.model.coef)
+            np.testing.assert_array_equal(x.model.support_x, y.model.support_x)
+            assert x.model.gamma == y.model.gamma
+
+
 # ----------------------------------------------------------------------
 # full-round differential matrix: ledger bytes, ensembles, student
 # ----------------------------------------------------------------------
@@ -115,20 +138,29 @@ def test_round_matches_across_engines(scenario, codec):
     loop = _report(scenario, codec, "loop")
     buck = _report(scenario, codec, "bucketed")
     shard = _report(scenario, codec, "sharded")
+    strm = _report(scenario, codec, "streamed")
 
     # ledger byte totals: wire sizes depend on model SHAPES and codec
-    # only, so every tier prices the round identically, to the byte
-    assert loop.comm == buck.comm == shard.comm
-    assert loop.n_eligible == buck.n_eligible == shard.n_eligible
+    # only, so every tier prices the round identically, to the byte —
+    # including the streamed round's compact ledger and shape-priced
+    # uploads (never encoded for pricing)
+    assert loop.comm == buck.comm == shard.comm == strm.comm
+    assert loop.n_eligible == buck.n_eligible == shard.n_eligible == strm.n_eligible
 
     # ensemble + distilled AUC tables agree exactly (rank statistics
     # absorb accumulation-order noise in the scores)
     assert buck.ensemble_auc == shard.ensemble_auc
     assert loop.ensemble_auc == buck.ensemble_auc
+    assert strm.ensemble_auc == buck.ensemble_auc
+    assert strm.mean_val_auc == buck.mean_val_auc
+    assert strm.mean_local_auc == buck.mean_local_auc
 
-    # the distilled student devices decode is the same model
+    # the distilled student devices decode is the same model; the
+    # streamed student (regenerated members, lazy proxy subsample) is
+    # bitwise-equal to the bucketed one
     for a, b, exact in ((buck.student, shard.student, _bitwise_mesh()),
-                        (loop.student, buck.student, False)):
+                        (loop.student, buck.student, False),
+                        (strm.student, buck.student, True)):
         assert type(a) is type(b)
         ca, cb = np.asarray(a.coef), np.asarray(b.coef)
         if exact:
@@ -136,6 +168,7 @@ def test_round_matches_across_engines(scenario, codec):
         else:
             np.testing.assert_allclose(ca, cb, atol=1e-4)
     assert loop.student_codec == buck.student_codec == shard.student_codec
+    assert strm.student_codec == buck.student_codec
 
 
 # ----------------------------------------------------------------------
@@ -171,6 +204,8 @@ def test_seeds_independent_of_grouping_and_shard_count():
         train_population(ds, mode="bucketed", seed=SEED, group_cap=8),
         train_population(ds, mode="sharded", seed=SEED, group_cap=256),
         train_population(ds, mode="sharded", seed=SEED, group_cap=8),
+        train_population(ds, mode="streamed", seed=SEED, chunk_devices=3),
+        train_population(ds, mode="streamed", seed=SEED, chunk_devices=100),
     ):
         for a, b in zip(base.outcomes, variant.outcomes):
             for split in ("train", "val", "test"):
