@@ -29,6 +29,7 @@ def main() -> None:
         futurework_bench,
         kernel_bench,
         serve_bench,
+        serve_load_bench,
         shard_bench,
         sim_bench,
         table1_datasets,
@@ -44,6 +45,7 @@ def main() -> None:
         ("distill_bench", distill_bench.run),
         ("kernels", kernel_bench.run),
         ("serve", serve_bench.run),
+        ("fleet", serve_load_bench.run),
         ("sim", sim_bench.run),
         ("shard", shard_bench.run),
         ("ablation", ablation_distill_loss.run),

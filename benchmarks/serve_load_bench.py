@@ -1,0 +1,283 @@
+"""Multi-tenant serve-fleet load curves (repro.fleet).
+
+For each tenant count the bench registers that many tenants —
+alternating "premium" (20 ms deadline, priority 1) and "batch" (100 ms
+deadline, priority 0) SLO classes, each with its own small RBF
+ensemble and a 2-shard scored-query LRU — then drives seeded open-loop
+Poisson traffic through ``ServeFleet`` at several multiples of the
+fleet's nominal scoring capacity and records the latency / goodput /
+shed curves. Everything downstream of trace generation runs in
+simulated milliseconds, so the recorded metrics are a pure function of
+(seed, config): the JSON artifact is byte-reproducible on any host and
+is committed as a baseline (``serve_load_bench.json`` next to this
+script, or argv ``--out PATH``); wall-clock only appears in the CSV
+rows, never in the JSON.
+
+Two properties are asserted in-bench (a broken fleet cannot silently
+record a curve), mirroring the equivalence bars in ``shard_bench``:
+
+  * conservation — every cell must report submitted == completed +
+    shed, globally and per tenant;
+  * graceful degradation — within each tenant-count sweep, goodput at
+    the highest offered load must hold >= 80% of the peak goodput
+    across the sweep (overload must saturate, not collapse: admission
+    control sheds the excess instead of letting it poison the queues).
+
+A determinism section replays the smallest cell with a fresh registry
+and fleet and requires the serialized summary dicts to be
+byte-identical (``tests/test_fleet.py`` pins the same property at test
+scale).
+
+Modes: no argv = full sweep; ``smoke`` / ``--smoke`` (tier-1 CI lanes)
+shrinks the horizon and grid but still covers >= 2 tenant counts x
+>= 3 load levels, fast enough to ride every PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import assert_not_interpret, csv_row
+
+# the two SLO classes tenants alternate between (even index = premium)
+_CLASS_SLOS = {
+    "premium": dict(deadline_ms=20.0, priority=1),
+    "batch": dict(deadline_ms=100.0, priority=0),
+}
+
+
+def _make_ensemble(k: int, n_support: int, dim: int, seed: int):
+    import numpy as np
+
+    from repro.core import Ensemble
+    from repro.core.svm import SVMModel
+
+    rng = np.random.default_rng(seed)
+    return Ensemble([
+        SVMModel(
+            support_x=rng.normal(0.0, 1.0, (n_support, dim)).astype(np.float32),
+            coef=rng.normal(0.0, 0.1, n_support).astype(np.float32),
+            gamma=0.2,
+        )
+        for _ in range(k)
+    ])
+
+
+def _tenant_class(index: int) -> str:
+    return "premium" if index % 2 == 0 else "batch"
+
+
+def _make_registry(n_tenants: int, serve, quota: int, seed: int,
+                   dim: int, n_shards: int = 2):
+    from repro.fleet import TenantRegistry, TenantSLO
+
+    registry = TenantRegistry()
+    for i in range(n_tenants):
+        slo = TenantSLO(quota=quota, **_CLASS_SLOS[_tenant_class(i)])
+        registry.register(
+            f"t{i:02d}",
+            _make_ensemble(k=4, n_support=40, dim=dim, seed=seed * 1000 + i),
+            slo=slo,
+            serve=serve,
+            n_shards=n_shards,
+        )
+    return registry
+
+
+def _class_blocks(tenants: dict) -> dict:
+    """Aggregate the per-tenant summary blocks into the two SLO classes
+    (counters summed, rates recomputed from the sums, p99 worst-case)."""
+    out = {}
+    for cls in _CLASS_SLOS:
+        blocks = [
+            b for name, b in tenants.items()
+            if _tenant_class(int(name[1:])) == cls
+        ]
+        if not blocks:
+            continue
+        submitted = sum(b["submitted"] for b in blocks)
+        completed = sum(b["completed"] for b in blocks)
+        met = sum(b["deadline_met"] for b in blocks)
+        shed = sum(b["shed"] for b in blocks)
+        out[cls] = {
+            "tenants": len(blocks),
+            "submitted": submitted,
+            "goodput_qps": round(sum(b["goodput_qps"] for b in blocks), 3),
+            "p99_ms": max(b["p99_ms"] for b in blocks),
+            "shed_rate": round(shed / submitted, 6) if submitted else 0.0,
+            "deadline_met_rate": round(met / completed, 6) if completed else 0.0,
+        }
+    return out
+
+
+def _run_cell(n_tenants: int, load: float, *, horizon_ms: float, seed: int,
+              pool_size: int, serve, fleet_config, quota: int, dim: int):
+    """One (tenant count, offered load) cell: fresh registry + fleet,
+    full trace, drained summary. Returns (summary, n_requests)."""
+    from repro.fleet import (ServeFleet, nominal_capacity_qps, open_loop_trace)
+
+    registry = _make_registry(n_tenants, serve, quota, seed, dim)
+    capacity = nominal_capacity_qps(fleet_config.n_servers, serve, fleet_config.cost)
+    rate = load * capacity / n_tenants
+    trace = open_loop_trace(
+        {name: rate for name in registry.names()},
+        horizon_ms=horizon_ms, dim=dim, seed=seed, pool_size=pool_size,
+    )
+    fleet = ServeFleet(registry, fleet_config)
+    summary = fleet.run(trace, horizon_ms=horizon_ms)
+    return summary, len(trace)
+
+
+def run_sweep(tenant_counts, loads, *, horizon_ms: float, seed: int,
+              pool_size: int, serve, fleet_config, quota: int, dim: int):
+    """The load x tenant-count grid, with the in-bench conservation and
+    graceful-degradation assertions."""
+    rows, sweeps = [], {}
+    for n_tenants in tenant_counts:
+        curve = []
+        for load in loads:
+            t0 = time.perf_counter()
+            summary, n_req = _run_cell(
+                n_tenants, load, horizon_ms=horizon_ms, seed=seed,
+                pool_size=pool_size, serve=serve, fleet_config=fleet_config,
+                quota=quota, dim=dim)
+            wall = time.perf_counter() - t0
+            g = summary["global"]
+            assert g["conserved"] and all(
+                b["conserved"] for b in summary["tenants"].values()
+            ), f"tenants={n_tenants} load={load}: conservation violated"
+            curve.append({
+                "n_tenants": n_tenants,
+                "load_x_capacity": load,
+                "requests": n_req,
+                "offered_qps": g["offered_qps"],
+                "goodput_qps": g["goodput_qps"],
+                "p50_ms": g["p50_ms"],
+                "p95_ms": g["p95_ms"],
+                "p99_ms": g["p99_ms"],
+                "shed_rate": g["shed_rate"],
+                "deadline_met_rate": g["deadline_met_rate"],
+                "batch_occupancy": g["batch_occupancy"],
+                "cache_hit_rate": g["cache_hit_rate"],
+                "classes": _class_blocks(summary["tenants"]),
+            })
+            rows.append(csv_row(
+                f"fleet.t{n_tenants}.load{load:g}",
+                f"{g['goodput_qps']:.0f}",
+                f"goodput qps; p99={g['p99_ms']:.2f}ms "
+                f"shed={g['shed_rate']:.3f} occ={g['batch_occupancy']:.2f} "
+                f"({n_req} req, {wall:.1f}s wall)"))
+        peak = max(c["goodput_qps"] for c in curve)
+        worst = curve[-1]["goodput_qps"]  # loads ascend: last = most overload
+        assert worst >= 0.8 * peak, (
+            f"tenants={n_tenants}: goodput collapsed under overload "
+            f"({worst:.0f} qps at {loads[-1]}x vs peak {peak:.0f})")
+        rows.append(csv_row(
+            f"fleet.t{n_tenants}.degradation",
+            f"{worst / peak:.3f}",
+            f"goodput at {loads[-1]:g}x capacity / peak (bar: >= 0.8)"))
+        sweeps[f"tenants={n_tenants}"] = curve
+    return rows, sweeps
+
+
+def run_determinism(n_tenants: int, load: float, **cell_kwargs):
+    """Replay one cell with a fresh registry/fleet; the serialized
+    summaries must be byte-identical (simulated time, seeded traffic,
+    crc32 routing — no wall-clock anywhere in the control plane)."""
+    a, _ = _run_cell(n_tenants, load, **cell_kwargs)
+    b, _ = _run_cell(n_tenants, load, **cell_kwargs)
+    sa, sb = (json.dumps(s, sort_keys=True) for s in (a, b))
+    assert sa == sb, "fleet summary not byte-identical across replays"
+    return (
+        [csv_row("fleet.determinism", "exact",
+                 f"replayed summary byte-identical (t{n_tenants}, {load:g}x)")],
+        {"repeat_identical": True, "n_tenants": n_tenants,
+         "load_x_capacity": load},
+    )
+
+
+def run(tenant_counts=(2, 4, 8), loads=(0.25, 0.5, 1.0, 1.5, 2.0, 3.0),
+        horizon_ms: float = 300.0, seed: int = 7, pool_size: int = 2048,
+        quota: int = 256, json_path=None):
+    """Compose the bench sections and write the (deterministic) JSON
+    artifact. Called bare by benchmarks/run.py (full mode); the
+    __main__ modes are parameter presets over this."""
+    from repro.fleet import CostModel, FleetConfig, nominal_capacity_qps
+    from repro.serve import ServeConfig
+
+    assert_not_interpret()
+    # small latency-shaped batches; per-shard LRU of 256 over a pool_size
+    # query pool keeps the hit rate meaningful without masking overload
+    serve = ServeConfig(max_batch=32, max_queue=4096, buckets=(8, 32),
+                        cache_size=256)
+    fleet_config = FleetConfig(n_servers=2, max_global_queue=1024,
+                               cost=CostModel())
+    dim = 8
+    capacity = nominal_capacity_qps(fleet_config.n_servers, serve, fleet_config.cost)
+
+    rows = [csv_row("fleet.capacity", f"{capacity:.0f}",
+                    f"nominal qps ({fleet_config.n_servers} servers, "
+                    f"max_batch={serve.max_batch})")]
+    payload = {
+        "config": {
+            "tenant_counts": list(tenant_counts),
+            "loads_x_capacity": list(loads),
+            "horizon_ms": horizon_ms,
+            "seed": seed,
+            "pool_size": pool_size,
+            "quota": quota,
+            "dim": dim,
+            "n_servers": fleet_config.n_servers,
+            "max_global_queue": fleet_config.max_global_queue,
+            "serve": {"max_batch": serve.max_batch, "buckets": list(serve.buckets),
+                      "cache_size": serve.cache_size},
+            "cost": dataclass_dict(fleet_config.cost),
+            "slo_classes": _CLASS_SLOS,
+            "nominal_capacity_qps": round(capacity, 3),
+        },
+    }
+
+    cell_kwargs = dict(horizon_ms=horizon_ms, seed=seed, pool_size=pool_size,
+                       serve=serve, fleet_config=fleet_config, quota=quota,
+                       dim=dim)
+    sweep_rows, sweeps = run_sweep(tenant_counts, loads, **cell_kwargs)
+    rows += sweep_rows
+    payload["sweeps"] = sweeps
+
+    det_rows, determinism = run_determinism(tenant_counts[0], loads[0],
+                                            **cell_kwargs)
+    rows += det_rows
+    payload["determinism"] = determinism
+
+    if json_path is None:
+        json_path = os.path.join(os.path.dirname(__file__),
+                                 "serve_load_bench.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    rows.append(csv_row("fleet.json", json_path, "load curve artifact"))
+    return rows
+
+
+def dataclass_dict(obj) -> dict:
+    import dataclasses
+
+    return dataclasses.asdict(obj)
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    out = None
+    if "--out" in argv:
+        out = argv[argv.index("--out") + 1]
+    if "smoke" in argv or "--smoke" in argv:
+        # tier-1 CI lanes: same grid shape (>= 2 tenant counts x >= 3
+        # loads), shorter horizon — the curves stay meaningful because
+        # the metrics are simulated-time, only wall cost shrinks
+        print("\n".join(run(tenant_counts=(2, 4), loads=(0.5, 1.0, 2.0),
+                            horizon_ms=150.0, pool_size=1024,
+                            json_path=out)))
+    else:
+        print("\n".join(run(json_path=out)))

@@ -162,6 +162,14 @@ class QuantizedStackedEnsemble:
     def k(self) -> int:
         return self.q.shape[0]
 
+    @property
+    def n_max(self) -> int:
+        return self.q.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.q.shape[2]
+
     @classmethod
     def from_members(cls, members: Sequence["QuantizedSVM"]) -> "QuantizedStackedEnsemble":
         if not members:

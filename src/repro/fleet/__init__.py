@@ -1,0 +1,81 @@
+"""repro.fleet — the multi-tenant, SLO-driven serve fleet.
+
+The paper's output is a global model; the ROADMAP's north star is that
+model serving heavy traffic from millions of users. ``repro.serve``
+built the single-tenant data plane (fused kernels, micro-batching, an
+LRU); this package is the control plane above it: MANY tenants — one
+deployed one-shot artifact each (distilled student, ``Ensemble``, or
+int8 ``QuantizedStackedEnsemble``) — share a bounded pool of scoring
+servers under per-tenant latency SLOs.
+
+Modules
+-------
+clock.py     ``SimClock``/``EventQueue``/``CostModel`` — the fleet runs
+             entirely in simulated milliseconds (no wall-clock in the
+             control plane), so a run is bitwise-reproducible from its
+             seed on any host.
+registry.py  tenant -> model + ``ServeConfig`` + ``TenantSLO``
+             (deadline/priority/quota), cache shard count, relative
+             cost; models load live or straight from wire blobs /
+             ``save_payload`` checkpoints (``register_wire``).
+fleet.py     ``ServeFleet`` — admission control (bounded global queue,
+             per-tenant quotas, shed-on-hopeless), earliest-deadline-
+             first batch assembly across tenants, per-shard
+             ``MicroBatchScheduler`` scoring, deterministic service
+             times.
+metrics.py   per-tenant + global p50/p95/p99 latency, goodput
+             (deadline-met QPS), shed accounting (conservation:
+             submitted == completed + shed), batch occupancy, cache
+             hit rate — exported as one plain dict
+             (``CommLedger.summary()`` style).
+traffic.py   seeded open-loop Poisson arrival traces per tenant.
+handoff.py   ``serve_round_artifact`` — deploy a finished round's
+             model through encode -> checkpoint -> register_wire and
+             measure it under load (``fed_run --serve-fleet``).
+
+``benchmarks/serve_load_bench.py`` sweeps offered load x tenant count
+through this package and records the latency/goodput/shed curves in
+``serve_load_bench.json``; ``tests/test_fleet.py`` pins determinism,
+conservation, EDF ordering, cache-shard disjointness, and graceful
+degradation under overload.
+"""
+from repro.fleet.clock import CostModel, EventQueue, SimClock
+from repro.fleet.fleet import FleetConfig, ServeFleet, nominal_capacity_qps
+from repro.fleet.handoff import serve_round_artifact
+from repro.fleet.metrics import FleetMetrics, nearest_rank
+from repro.fleet.registry import (
+    FLEET_SERVE_CONFIG,
+    Tenant,
+    TenantRegistry,
+    TenantSLO,
+    shard_for,
+)
+from repro.fleet.traffic import (
+    Arrival,
+    offered_qps,
+    open_loop_trace,
+    poisson_arrival_times,
+    query_pool,
+)
+
+__all__ = [
+    "Arrival",
+    "CostModel",
+    "EventQueue",
+    "FLEET_SERVE_CONFIG",
+    "FleetConfig",
+    "FleetMetrics",
+    "ServeFleet",
+    "SimClock",
+    "Tenant",
+    "TenantRegistry",
+    "TenantSLO",
+    "nearest_rank",
+    "nominal_capacity_qps",
+    "offered_qps",
+    "open_loop_trace",
+    "poisson_arrival_times",
+    "query_pool",
+    "serve_round_artifact",
+    "shard_for",
+]

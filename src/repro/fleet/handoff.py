@@ -1,0 +1,111 @@
+"""Round -> fleet handoff: deploy a finished one-shot round's artifact.
+
+``serve_round_artifact`` takes the model a round produced (the
+distilled student off ``PopulationReport.student`` /
+``ProtocolResult.student``, or a selected ``Ensemble``) and runs it
+through the FULL deployment path:
+
+    encode(model)  ──►  checkpoint.manager.save_payload (wire blob as
+         │              an npz checkpoint — the round's persisted form)
+         ▼
+    TenantRegistry.register_wire(path)  x  SLO classes — the same
+         │              deployed model served under different contracts
+         ▼              ("premium": tight deadline, high priority;
+    ServeFleet.run(     "batch": loose deadline)
+      open-loop Poisson trace at `load` x nominal capacity)
+         ▼
+    metrics summary dict  — lands in the fed_run report under "fleet"
+
+The tenants deliberately share one model: multi-tenancy here is about
+SLO classes contending for the same scoring hardware, which is exactly
+what admission control + EDF arbitrate. ``fed_run --mode sim
+--serve-fleet`` drives this after the round; everything is simulated
+time, so the handoff adds deterministic milliseconds of metrics, not
+wall-clock minutes of load testing.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Optional
+
+from repro.fleet.clock import CostModel
+from repro.fleet.fleet import FleetConfig, ServeFleet, nominal_capacity_qps
+from repro.fleet.registry import TenantRegistry, TenantSLO
+from repro.fleet.traffic import open_loop_trace
+from repro.serve import ServeConfig
+
+# the two stock SLO classes of the handoff fleet
+PREMIUM_SLO = TenantSLO(deadline_ms=20.0, priority=1, quota=512)
+BATCH_SLO = TenantSLO(deadline_ms=100.0, priority=0, quota=512)
+
+
+def _wire_codec(model) -> str:
+    """The codec a round artifact re-encodes under: int8 payloads keep
+    their wire form, everything else ships lossless."""
+    from repro.comm.wire import QuantizedSVM
+
+    return "int8" if isinstance(model, QuantizedSVM) else "fp32"
+
+
+def serve_round_artifact(
+    model,
+    *,
+    seed: int = 0,
+    horizon_ms: float = 250.0,
+    load: float = 1.0,
+    n_servers: int = 2,
+    checkpoint_dir: Optional[str] = None,
+    keep_results: bool = False,
+) -> dict:
+    """Deploy ``model`` behind a two-SLO-class fleet and measure it
+    under ``load`` x nominal capacity of open-loop Poisson traffic.
+
+    The model round-trips ``encode -> save_payload -> register_wire``
+    (via ``checkpoint_dir`` or a temporary directory), so the fleet
+    serves exactly what a consumer restoring the round's checkpoint
+    would score. Returns the fleet summary dict plus the handoff
+    config."""
+    from repro.checkpoint.manager import save_payload
+    from repro.comm.wire import encode
+
+    codec = _wire_codec(model)
+    blob = encode(model, codec)
+
+    serve = ServeConfig(max_batch=32, max_queue=4096, buckets=(8, 32), cache_size=256)
+    config = FleetConfig(n_servers=n_servers, max_global_queue=1024)
+
+    def _register(registry: TenantRegistry, path: str) -> None:
+        registry.register_wire("premium", path, slo=PREMIUM_SLO, serve=serve,
+                               n_shards=2)
+        registry.register_wire("batch", path, slo=BATCH_SLO, serve=serve,
+                               n_shards=2)
+
+    registry = TenantRegistry()
+    if checkpoint_dir is not None:
+        _register(registry, save_payload(checkpoint_dir, blob))
+    else:
+        with tempfile.TemporaryDirectory(prefix="fleet_handoff_") as tmp:
+            _register(registry, save_payload(os.path.join(tmp, "artifact"), blob))
+
+    capacity = nominal_capacity_qps(config.n_servers, serve, config.cost)
+    rate = load * capacity / len(registry)
+    trace = open_loop_trace(
+        {name: rate for name in registry.names()},
+        horizon_ms=horizon_ms,
+        dim=int(registry.get("premium").scorer.stacked.d),
+        seed=seed,
+        pool_size=128,
+    )
+    fleet = ServeFleet(registry, config, keep_results=keep_results)
+    out = fleet.run(trace, horizon_ms=horizon_ms)
+    out["handoff"] = {
+        "codec": codec,
+        "wire_nbytes": len(blob),
+        "seed": int(seed),
+        "load_x_capacity": float(load),
+        "nominal_capacity_qps": round(capacity, 3),
+        "n_servers": config.n_servers,
+        "requests": len(trace),
+    }
+    return out

@@ -39,6 +39,11 @@ byte totals. ``--distill-proxy N`` distills the best selected ensemble
 through ``repro.distill`` (``--distill-solver dense|cg|nystrom|auto``,
 ``--proxy-source validation|public|gaussian|scenario``,
 ``--student-codec`` for an independent download codec).
+``--serve-fleet`` then deploys the distilled student behind the
+multi-tenant serve fleet (``repro.fleet``) — wire blob -> checkpoint ->
+tenant registry -> simulated open-loop load — and appends the SLO
+metrics (latency percentiles, goodput, shed rate) to the report under
+``"fleet"``.
 """
 from __future__ import annotations
 
@@ -136,6 +141,23 @@ def run_sim(args) -> dict:
         out["time_to_aggregate"] = {
             s: dict(v) for s, v in report.time_to_aggregate.items()
         }
+    if args.serve_fleet:
+        if report.student is None:
+            raise SystemExit(
+                "--serve-fleet deploys the round's distilled student: "
+                "run with --distill-proxy N (N > 0) so the round produces one"
+            )
+        from repro.fleet import serve_round_artifact
+
+        # deploy the round's artifact through the wire -> checkpoint ->
+        # fleet path and measure it under load (simulated time: this
+        # adds metrics, not wall-clock minutes)
+        out["fleet"] = serve_round_artifact(
+            report.student,
+            seed=args.seed,
+            horizon_ms=args.fleet_horizon_ms,
+            load=args.fleet_load,
+        )
     print(json.dumps(out, indent=2))
     if args.out:
         with open(args.out, "w") as f:
@@ -183,6 +205,16 @@ def main(argv=None):
     ap.add_argument("--student-codec", default=None,
                     help="sim mode: student download codec "
                          "(default: the round's --codec)")
+    ap.add_argument("--serve-fleet", action="store_true",
+                    help="sim mode: after the round, deploy the distilled "
+                         "student behind the multi-tenant serve fleet "
+                         "(repro.fleet) and report SLO metrics under load "
+                         "(requires --distill-proxy)")
+    ap.add_argument("--fleet-horizon-ms", type=float, default=250.0,
+                    help="--serve-fleet: simulated traffic window (ms)")
+    ap.add_argument("--fleet-load", type=float, default=1.0,
+                    help="--serve-fleet: offered load as a multiple of "
+                         "the fleet's nominal scoring capacity")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=30)

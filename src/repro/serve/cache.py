@@ -34,8 +34,19 @@ class LRUCache:
     def __len__(self) -> int:
         return len(self._d)
 
+    def __contains__(self, key: Hashable) -> bool:
+        """Stats-free peek: no counter bump, no recency update. The
+        fleet's admission/assembly paths use this to ask 'would this
+        be a hit?' without polluting the hit-rate metric."""
+        return key in self._d
+
     def get(self, key: Hashable) -> Optional[Any]:
-        if self.capacity <= 0 or key not in self._d:
+        if self.capacity <= 0:
+            # disabled cache: not a miss — counting it would pollute
+            # the exported hit-rate metric with lookups that were
+            # never cacheable in the first place
+            return None
+        if key not in self._d:
             self.misses += 1
             return None
         self._d.move_to_end(key)

@@ -19,8 +19,9 @@ documented once in the ``repro.serve`` package docstring.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Callable, Deque, Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -49,15 +50,18 @@ class ServeConfig:
             raise ValueError("max_uncollected must be >= max_queue")
         if not self.buckets or any(b < 1 for b in self.buckets):
             raise ValueError("buckets must be non-empty positive sizes")
-        if max(self.buckets) < self.max_batch:
+        # normalize ONCE to an ascending tuple so bucket_for is a
+        # binary search, not a per-call sort (it runs on every batch)
+        object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
+        if self.buckets[-1] < self.max_batch:
             raise ValueError("largest bucket must cover max_batch")
 
     def bucket_for(self, n: int) -> int:
-        """Smallest configured bucket >= n."""
-        for b in sorted(self.buckets):
-            if b >= n:
-                return b
-        raise ValueError(f"batch of {n} exceeds largest bucket {max(self.buckets)}")
+        """Smallest configured bucket >= n (buckets are kept sorted)."""
+        i = bisect.bisect_left(self.buckets, n)
+        if i == len(self.buckets):
+            raise ValueError(f"batch of {n} exceeds largest bucket {self.buckets[-1]}")
+        return self.buckets[i]
 
 
 @dataclasses.dataclass
@@ -96,6 +100,11 @@ class MicroBatchScheduler:
         self.stats = SchedulerStats()
         self._queue: Deque[_Pending] = deque()
         self._results: Dict[int, _Pending] = {}
+        # done-but-uncollected tickets in completion order: eviction
+        # pops the oldest-completed first in O(1) instead of scanning
+        # the whole results dict every flush; result() removes in O(1)
+        # so the structure never outgrows the uncollected set
+        self._done: "OrderedDict[int, None]" = OrderedDict()
         self._next_ticket = 0
 
     # -- request side ---------------------------------------------------
@@ -141,6 +150,7 @@ class MicroBatchScheduler:
                     # copy across the cache boundary: a caller mutating
                     # its result must never poison later hits
                     p.result, p.done = np.copy(hit), True
+                    self._done[p.ticket] = None
                     self.stats.answered_from_cache += 1
                 elif caching and p.key in in_batch:
                     # hot-burst dedupe: identical rows queued before the
@@ -163,22 +173,22 @@ class MicroBatchScheduler:
                 calls += 1
             for p in dups:
                 p.result, p.done = np.copy(in_batch[p.key].result), True
+                self._done[p.ticket] = None
                 self.stats.deduped_in_flight += 1
         self._evict_uncollected()
         return calls
 
     def _evict_uncollected(self) -> None:
         """Bound memory under abandoned tickets: keep at most
-        ``max_uncollected`` scored-but-unclaimed results (oldest go
-        first; dict preserves insertion order). Unscored entries live
-        in the bounded queue, so total state stays bounded."""
+        ``max_uncollected`` scored-but-unclaimed results. Oldest-
+        COMPLETED go first, popped off the ``_done`` order in
+        O(evicted) — no scan of the results dict (which used to cost
+        O(all results) on every flush). Unscored entries live in the
+        bounded queue, so total state stays bounded."""
         over = len(self._results) - self.config.max_uncollected
-        if over <= 0:
-            return
-        for t in list(self._results):
-            if over <= 0:
-                break
-            if self._results[t].done:
+        while over > 0 and self._done:
+            t, _ = self._done.popitem(last=False)
+            if t in self._results:  # invariant: always true (see result())
                 del self._results[t]
                 self.stats.evicted_results += 1
                 over -= 1
@@ -199,6 +209,7 @@ class MicroBatchScheduler:
             # copy: out[i] is a view — don't pin the whole bucket output
             # per ticket or expose sibling rows via result.base
             p.result, p.done = np.copy(out[i]), True
+            self._done[p.ticket] = None
             if caching:
                 self.cache.put(p.key, np.copy(out[i]))
         self.stats.batches += 1
@@ -213,6 +224,7 @@ class MicroBatchScheduler:
         if not p.done:
             raise RuntimeError(f"ticket {ticket} not scored yet — call flush()")
         del self._results[ticket]
+        self._done.pop(ticket, None)  # keep the done order free of stale tickets
         return p.result
 
     def run(self, rows: Sequence[np.ndarray]) -> np.ndarray:

@@ -1,0 +1,387 @@
+"""repro.fleet: simulated clock, seeded traffic, admission control, EDF
+batching, cache sharding, metrics conservation, and the wire-blob
+deployment path (register_wire / serve_round_artifact / fed_run)."""
+import json
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import Ensemble
+from repro.core.svm import SVMModel
+from repro.fleet import (
+    CostModel,
+    EventQueue,
+    FleetConfig,
+    ServeFleet,
+    SimClock,
+    TenantRegistry,
+    TenantSLO,
+    nearest_rank,
+    nominal_capacity_qps,
+    offered_qps,
+    open_loop_trace,
+    poisson_arrival_times,
+    query_pool,
+    serve_round_artifact,
+    shard_for,
+)
+from repro.serve import ServeConfig
+from repro.serve.cache import query_key
+
+SERVE = ServeConfig(max_batch=8, max_queue=256, buckets=(4, 8), cache_size=64)
+
+
+def _ensemble(k=3, n=20, d=4, seed=0):
+    rg = np.random.default_rng(seed)
+    return Ensemble([
+        SVMModel(
+            support_x=rg.normal(0, 1, (n, d)).astype(np.float32),
+            coef=rg.normal(0, 0.1, n).astype(np.float32),
+            gamma=0.2,
+        )
+        for _ in range(k)
+    ])
+
+
+def _registry(n_tenants=2, n_shards=2, quota=64, deadline_ms=50.0, serve=SERVE):
+    reg = TenantRegistry()
+    for i in range(n_tenants):
+        reg.register(f"t{i}", _ensemble(seed=i), serve=serve, n_shards=n_shards,
+                     slo=TenantSLO(deadline_ms=deadline_ms, quota=quota))
+    return reg
+
+
+def _run(load, *, n_tenants=2, horizon_ms=60.0, seed=3, pool_size=64, **reg_kw):
+    config = FleetConfig(n_servers=2, max_global_queue=128)
+    capacity = nominal_capacity_qps(config.n_servers, SERVE, config.cost)
+    reg = _registry(n_tenants, **reg_kw)
+    trace = open_loop_trace(
+        {name: load * capacity / n_tenants for name in reg.names()},
+        horizon_ms=horizon_ms, dim=4, seed=seed, pool_size=pool_size,
+    )
+    return ServeFleet(reg, config).run(trace, horizon_ms=horizon_ms)
+
+
+# ----------------------------------------------------------------------
+# clock / events / cost
+# ----------------------------------------------------------------------
+
+def test_clock_is_monotone():
+    c = SimClock()
+    c.advance_to(5.0)
+    c.advance_to(5.0)  # equal is fine
+    assert c.now_ms == 5.0
+    with pytest.raises(ValueError, match="backward"):
+        c.advance_to(4.0)
+
+
+def test_event_queue_orders_by_time_then_schedule():
+    q = EventQueue()
+    q.push(2.0, "late")
+    q.push(1.0, "a")
+    q.push(1.0, "b")  # same time: pops in schedule order
+    assert q.peek_time() == 1.0
+    assert [q.pop() for _ in range(3)] == [(1.0, "a"), (1.0, "b"), (2.0, "late")]
+    assert not q
+
+
+def test_cost_model_is_deterministic_and_monotone():
+    c = CostModel()
+    one = c.service_ms(1, 8, 0, 1.0)
+    assert one == c.service_ms(1, 8, 0, 1.0)
+    assert c.service_ms(1, 32, 0, 1.0) > one       # more rows cost more
+    assert c.service_ms(2, 8, 0, 1.0) > one        # more calls cost more
+    assert c.service_ms(1, 8, 0, 2.0) > one        # scaled tenant costs more
+    assert c.min_service_ms(4, 1.0) <= one
+
+
+def test_nearest_rank_percentiles():
+    xs = [1.0, 2.0, 3.0, 4.0]
+    assert nearest_rank(xs, 50) == 2.0
+    assert nearest_rank(xs, 99) == 4.0  # always an observed value
+    assert nearest_rank([], 50) == 0.0
+
+
+# ----------------------------------------------------------------------
+# traffic
+# ----------------------------------------------------------------------
+
+def test_traffic_is_seeded_and_time_sorted():
+    rates = {"a": 4000.0, "b": 2000.0}
+    t1 = open_loop_trace(rates, horizon_ms=50.0, dim=4, seed=5)
+    t2 = open_loop_trace(rates, horizon_ms=50.0, dim=4, seed=5)
+    assert len(t1) == len(t2) > 0
+    assert all(x.t_ms == y.t_ms and x.tenant == y.tenant and
+               np.array_equal(x.row, y.row) for x, y in zip(t1, t2))
+    assert all(a.t_ms <= b.t_ms for a, b in zip(t1, t1[1:]))
+    t3 = open_loop_trace(rates, horizon_ms=50.0, dim=4, seed=6)
+    assert [a.t_ms for a in t1] != [a.t_ms for a in t3]
+    # realized load is near the offered rates over the window
+    q = offered_qps(t1, 50.0)
+    assert q["a"] == pytest.approx(4000.0, rel=0.35)
+    assert q["a"] > q["b"]
+
+
+def test_traffic_streams_are_independent_of_registration_order():
+    """Tenant streams key off the rank in sorted-name order, so the
+    same name gets the same arrivals whatever else is in the dict."""
+    a_alone = [x.t_ms for x in
+               open_loop_trace({"a": 3000.0}, horizon_ms=30.0, dim=4, seed=1)]
+    merged = open_loop_trace({"b": 1000.0, "a": 3000.0}, horizon_ms=30.0,
+                             dim=4, seed=1)
+    assert [x.t_ms for x in merged if x.tenant == "a"] == a_alone
+    times = poisson_arrival_times(3000.0, 30.0, seed=1, tenant_index=0)
+    assert np.all(np.diff(times) >= 0) and times[-1] < 30.0
+    pool = query_pool(16, 4, seed=1)
+    assert pool.shape == (16, 4) and pool.dtype == np.float32
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+def test_registry_validation():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        TenantSLO(deadline_ms=0.0)
+    with pytest.raises(ValueError, match="quota"):
+        TenantSLO(quota=0)
+    with pytest.raises(ValueError, match="n_shards"):
+        _registry(1, n_shards=0)
+    with pytest.raises(ValueError, match="n_servers"):
+        FleetConfig(n_servers=0)
+    reg = _registry(1)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("t0", _ensemble())
+    with pytest.raises(KeyError, match="unknown tenant"):
+        reg.get("nope")
+    with pytest.raises(ValueError, match="at least one"):
+        ServeFleet(TenantRegistry())
+    assert "t0" in reg and len(reg) == 1 and reg.names() == ["t0"]
+
+
+def test_register_wire_from_bytes_and_checkpoint(tmp_path, rng):
+    """The deployment path: raw encode() bytes and a save_payload
+    checkpoint must both serve scores identical to the live model."""
+    from repro.checkpoint.manager import save_payload
+    from repro.comm.wire import decode, encode
+    from repro.serve import EnsembleScorer
+
+    model = _ensemble(seed=9)
+    blob = encode(model, "fp32")
+    reg = TenantRegistry()
+    reg.register_wire("raw", blob, serve=SERVE)
+    path = save_payload(str(tmp_path / "round"), blob)
+    reg.register_wire("ckpt", path, serve=SERVE)
+
+    x = rng.normal(0, 1, (6, 4)).astype(np.float32)
+    want = EnsembleScorer(decode(blob))(x)
+    np.testing.assert_array_equal(reg.get("raw").scorer(x), want)
+    np.testing.assert_array_equal(reg.get("ckpt").scorer(x), want)
+
+
+def test_shard_for_is_stable_crc32():
+    key = query_key(np.arange(4, dtype=np.float32))
+    assert shard_for(key[2], 1) == 0
+    assert shard_for(key[2], 4) == zlib.crc32(key[2]) % 4  # not hash(): salted
+
+
+# ----------------------------------------------------------------------
+# fleet: determinism, conservation, degradation, EDF, sharding
+# ----------------------------------------------------------------------
+
+def test_summary_is_byte_identical_across_runs():
+    a = _run(1.5)
+    b = _run(1.5)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_conservation_under_overload():
+    s = _run(3.0, quota=16)  # hard overload: queue_full + quota sheds
+    for block in [s["global"], *s["tenants"].values()]:
+        assert block["conserved"]
+        assert block["submitted"] == block["completed"] + block["shed"]
+        assert block["shed"] == (block["shed_queue_full"] + block["shed_quota"]
+                                 + block["shed_hopeless"])
+        assert block["completed"] == block["deadline_met"] + block["deadline_missed"]
+    g = s["global"]
+    assert g["shed"] > 0 and g["shed_quota"] > 0
+    assert g["submitted"] == sum(t["submitted"] for t in s["tenants"].values())
+
+
+def test_goodput_degrades_gracefully_under_overload():
+    """The acceptance bar: 2x nominal capacity must keep >= 80% of the
+    peak goodput — admission control sheds the excess instead of letting
+    queue bloat poison every request."""
+    curve = {load: _run(load)["global"]["goodput_qps"] for load in (0.5, 1.0, 2.0)}
+    assert curve[2.0] >= 0.8 * max(curve.values())
+    assert curve[1.0] > curve[0.5]  # below saturation goodput tracks load
+
+
+def test_hopeless_requests_are_shed_not_scored():
+    """A tenant whose deadline is below the cheapest possible service
+    sheds uncached requests at the door; nothing is silently dropped."""
+    reg = TenantRegistry()
+    cheap = CostModel().min_service_ms(min(SERVE.buckets), 1.0)
+    reg.register("doomed", _ensemble(), serve=SERVE,
+                 slo=TenantSLO(deadline_ms=cheap / 2))
+    fleet = ServeFleet(reg, FleetConfig(n_servers=1))
+    rg = np.random.default_rng(0)
+    for i in range(5):
+        fleet.offer("doomed", rg.normal(0, 1, 4).astype(np.float32), float(i))
+    fleet.drain()
+    s = fleet.summary()
+    t = s["tenants"]["doomed"]
+    assert t["shed_hopeless"] == 5 and t["completed"] == 0 and t["conserved"]
+    assert all(st.scored_rows == 0 for st in fleet.shard_stats()["doomed"])
+
+
+def test_edf_scores_most_urgent_queue_first():
+    """With one server busy, the queued tight-deadline tenant is
+    dispatched before the queued loose-deadline tenant even though the
+    loose one arrived first."""
+    reg = TenantRegistry()
+    reg.register("loose", _ensemble(seed=0), serve=SERVE,
+                 slo=TenantSLO(deadline_ms=100.0))
+    reg.register("tight", _ensemble(seed=1), serve=SERVE,
+                 slo=TenantSLO(deadline_ms=10.0))
+    fleet = ServeFleet(reg, FleetConfig(n_servers=1))
+    rg = np.random.default_rng(0)
+    row = lambda: rg.normal(0, 1, 4).astype(np.float32)
+    fleet.offer("loose", row(), 0.0)   # takes the only server
+    fleet.offer("loose", row(), 0.0)   # queues first...
+    fleet.offer("tight", row(), 0.0)   # ...but has the earlier deadline
+    fleet.drain()
+    m = fleet.metrics.tenants
+    assert m["tight"].latencies_ms[0] < m["loose"].latencies_ms[1]
+
+
+def test_priority_breaks_exact_deadline_ties():
+    reg = TenantRegistry()
+    reg.register("lo", _ensemble(seed=0), serve=SERVE,
+                 slo=TenantSLO(deadline_ms=50.0, priority=0))
+    reg.register("hi", _ensemble(seed=1), serve=SERVE,
+                 slo=TenantSLO(deadline_ms=50.0, priority=1))
+    fleet = ServeFleet(reg, FleetConfig(n_servers=1))
+    rg = np.random.default_rng(0)
+    row = lambda: rg.normal(0, 1, 4).astype(np.float32)
+    fleet.offer("lo", row(), 0.0)  # takes the server
+    fleet.offer("lo", row(), 0.0)  # same absolute deadline as hi's...
+    fleet.offer("hi", row(), 0.0)  # ...priority must win the tie
+    fleet.drain()
+    m = fleet.metrics.tenants
+    assert m["hi"].latencies_ms[0] < m["lo"].latencies_ms[1]
+
+
+def test_cache_shards_partition_the_key_space():
+    """No query key may ever appear in two shards of a tenant's LRU,
+    and every cached key lives on the shard crc32 routing names."""
+    s = _run(1.0, n_tenants=1, pool_size=48, horizon_ms=40.0)
+    assert s["global"]["cache_hit_rate"] > 0  # repeats actually hit
+    fleet_reg = _registry(1)
+    config = FleetConfig(n_servers=2, max_global_queue=128)
+    capacity = nominal_capacity_qps(config.n_servers, SERVE, config.cost)
+    trace = open_loop_trace({"t0": capacity}, horizon_ms=40.0, dim=4, seed=3,
+                            pool_size=48)
+    fleet = ServeFleet(fleet_reg, config)
+    fleet.run(trace, horizon_ms=40.0)
+    caches = fleet.shard_caches()["t0"]
+    keysets = [set(c._d) for c in caches]
+    for i in range(len(keysets)):
+        for j in range(i + 1, len(keysets)):
+            assert not keysets[i] & keysets[j], "key duplicated across shards"
+    for shard, keys in enumerate(keysets):
+        assert all(shard_for(k[2], len(caches)) == shard for k in keys)
+    # every distinct query the pool offered landed in exactly one shard
+    assert sum(map(len, keysets)) == len(
+        {query_key(a.row) for a in trace}
+    )
+
+
+def test_results_match_direct_scoring():
+    """Under light load every admitted request's kept result equals the
+    tenant scorer applied directly to its row."""
+    reg = _registry(1, quota=256)
+    fleet = ServeFleet(reg, FleetConfig(n_servers=2), keep_results=True)
+    trace = open_loop_trace({"t0": 2000.0}, horizon_ms=30.0, dim=4, seed=11,
+                            pool_size=16)
+    s = fleet.run(trace, horizon_ms=30.0)
+    assert s["global"]["shed"] == 0
+    assert len(fleet.results) == len(trace)
+    scorer = reg.get("t0").scorer
+    for rid, arrival in enumerate(trace):
+        np.testing.assert_allclose(
+            fleet.results[rid], scorer(arrival.row[None])[0], atol=1e-5)
+
+
+def test_offer_rejects_time_travel():
+    fleet = ServeFleet(_registry(1), FleetConfig(n_servers=1))
+    row = np.zeros(4, np.float32)
+    fleet.offer("t0", row, 5.0)
+    with pytest.raises(ValueError, match="backward"):
+        fleet.offer("t0", row, 4.0)
+
+
+def test_metrics_reject_unknown_shed_reason():
+    from repro.fleet import FleetMetrics
+
+    m = FleetMetrics(["t"])
+    with pytest.raises(ValueError, match="shed reason"):
+        m.record_shed("t", "cosmic_rays")
+
+
+# ----------------------------------------------------------------------
+# deployment: handoff + fed_run
+# ----------------------------------------------------------------------
+
+def test_serve_round_artifact_roundtrip(tmp_path):
+    from repro.checkpoint.manager import restore_payload
+
+    out = serve_round_artifact(_ensemble(seed=4), seed=1, horizon_ms=40.0,
+                               load=1.0, checkpoint_dir=str(tmp_path / "round"))
+    h = out["handoff"]
+    assert h["codec"] == "fp32" and h["wire_nbytes"] > 0 and h["requests"] > 0
+    assert set(out["tenants"]) == {"premium", "batch"}
+    assert out["global"]["conserved"]
+    assert out["global"]["completed"] > 0
+    # the checkpoint written is the exact wire blob the fleet served
+    assert len(restore_payload(str(tmp_path / "round"))) == h["wire_nbytes"]
+    # deterministic: same artifact + seed -> byte-identical summary
+    again = serve_round_artifact(_ensemble(seed=4), seed=1, horizon_ms=40.0,
+                                 load=1.0)
+    assert json.dumps(again, sort_keys=True) == json.dumps(out, sort_keys=True)
+
+
+def test_serve_round_artifact_int8_student():
+    """An int8 student deploys in its wire form (q8 kernels), never
+    rehydrated to fp32."""
+    from repro.comm.wire import QuantizedSVM, decode, encode
+
+    model = decode(encode(_ensemble(k=1, seed=5).members[0], "int8"))
+    assert isinstance(model, QuantizedSVM)
+    out = serve_round_artifact(model, seed=0, horizon_ms=30.0)
+    assert out["handoff"]["codec"] == "int8"
+    assert out["global"]["conserved"] and out["global"]["completed"] > 0
+
+
+def test_fed_run_cli_serve_fleet(tmp_path):
+    from repro.launch.fed_run import main
+
+    out = main(["--mode", "sim", "--scenario", "iid", "--devices", "12",
+                "--k", "4", "--distill-proxy", "30", "--serve-fleet",
+                "--fleet-horizon-ms", "40", "--fleet-load", "1.5",
+                "--out", str(tmp_path / "report.json")])
+    fleet = out["fleet"]
+    assert fleet["global"]["conserved"]
+    assert fleet["handoff"]["load_x_capacity"] == 1.5
+    assert set(fleet["tenants"]) == {"premium", "batch"}
+    # the report (fleet section included) serializes cleanly
+    assert json.loads((tmp_path / "report.json").read_text())["fleet"]
+
+
+def test_fed_run_serve_fleet_requires_distill():
+    from repro.launch.fed_run import main
+
+    with pytest.raises(SystemExit, match="distill-proxy"):
+        main(["--mode", "sim", "--scenario", "iid", "--devices", "12",
+              "--k", "4", "--serve-fleet"])

@@ -260,11 +260,114 @@ def test_abandoned_tickets_are_bounded():
     assert sched.result(tickets[-1]) == pytest.approx(10.0)  # recent survives
 
 
+def test_eviction_skips_collected_and_keeps_done_order_bounded():
+    """The completion-order index behind O(evicted) eviction: collected
+    tickets leave it immediately (no stale growth), eviction removes the
+    oldest-completed *uncollected* tickets, and the stats they earned
+    (cache hits, dedupes, batches) survive eviction untouched."""
+    cfg = ServeConfig(max_batch=4, max_queue=4, buckets=(4,), max_uncollected=4, cache_size=16)
+    sched = MicroBatchScheduler(_echo_score, cfg)
+    hot = np.full(2, 9.0, np.float32)
+    t_hot = sched.submit(hot)
+    abandoned = [sched.submit(np.full(2, float(i), np.float32)) for i in range(3)]
+    sched.flush()
+    assert sched.result(t_hot) == pytest.approx(18.0)
+    assert t_hot not in sched._done  # collected -> out of the done order
+    assert len(sched._done) == len(sched._results) == 3
+    # next flush completes 2 more (one a cache hit): cap 4 evicts the
+    # single oldest-completed abandoned ticket, in completion order
+    sched.submit(hot)  # cache hit
+    sched.submit(np.full(2, 7.0, np.float32))
+    sched.flush()
+    assert sched.stats.evicted_results == 1
+    assert len(sched._results) == 4 and len(sched._done) == 4
+    with pytest.raises(KeyError):
+        sched.result(abandoned[0])
+    assert sched.result(abandoned[1]) == pytest.approx(2.0)
+    # eviction dropped results, not accounting
+    assert sched.stats.answered_from_cache == 1
+    assert sched.stats.batches == 2
+    assert sched.stats.submitted == 6
+
+
+def test_failed_flush_requeues_duplicates_in_ticket_order():
+    """A transient failure re-queues the in-flight batch AND its
+    deduped duplicates interleaved back into submission order, so the
+    retry replays exactly the original stream."""
+    state = {"fail": True}
+
+    def flaky(batch):
+        if state["fail"]:
+            state["fail"] = False
+            raise RuntimeError("transient device error")
+        return _echo_score(batch)
+
+    sched = MicroBatchScheduler(
+        flaky, ServeConfig(max_batch=8, buckets=(8,), cache_size=16)
+    )
+    a, b, c = (np.full(2, v, np.float32) for v in (1.0, 2.0, 3.0))
+    rows = [a, b, a, c, a]  # tickets 2 and 4 dedupe against 0 in flight
+    tickets = sched.submit_many(rows)
+    with pytest.raises(RuntimeError, match="transient"):
+        sched.flush()
+    assert [p.ticket for p in sched._queue] == tickets  # submission order
+    assert sched.flush() == 1  # retry: one scoring call, dedupe again
+    assert sched.stats.deduped_in_flight == 2
+    np.testing.assert_allclose(
+        [sched.result(t) for t in tickets], [r.sum() for r in rows]
+    )
+
+
+def test_submit_many_accepts_exact_remaining_capacity():
+    """The atomicity boundary: a batch that exactly fills the queue is
+    accepted whole; one row more rejects the whole batch."""
+    sched = MicroBatchScheduler(_echo_score, ServeConfig(max_batch=2, max_queue=3, buckets=(2,)))
+    sched.submit(np.ones(2, np.float32))
+    tickets = sched.submit_many([np.full(2, float(i), np.float32) for i in range(2)])
+    assert len(tickets) == 2 and sched.stats.submitted == 3
+    with pytest.raises(QueueFullError, match="exceeds remaining"):
+        sched.submit_many([np.ones(2, np.float32)])
+    assert sched.stats.submitted == 3  # rejection enqueued nothing
+    sched.flush()
+    assert len(sched.submit_many([np.ones(2, np.float32)] * 3)) == 3
+
+
 def test_cache_disabled_by_default():
     c = LRUCache(0)
     k = query_key(np.zeros(2, np.float32))
     c.put(k, 1.0)
     assert c.get(k) is None and len(c) == 0
+
+
+def test_disabled_cache_keeps_counters_clean():
+    """capacity <= 0 means lookups were never cacheable: neither hits
+    nor misses may move, or the exported hit-rate gets polluted."""
+    c = LRUCache(0)
+    k = query_key(np.zeros(2, np.float32))
+    c.put(k, 1.0)
+    assert c.get(k) is None
+    assert c.hits == 0 and c.misses == 0
+    # the scheduler path with caching off leaves them clean too
+    sched = MicroBatchScheduler(_echo_score, ServeConfig(max_batch=4, buckets=(4,)))
+    sched.run([np.ones(2, np.float32), np.ones(2, np.float32)])
+    assert sched.cache.hits == 0 and sched.cache.misses == 0
+
+
+def test_contains_is_a_stats_free_peek():
+    c = LRUCache(2)
+    ka, kb, kc = (query_key(np.array([v], np.float32)) for v in (1.0, 2.0, 3.0))
+    c.put(ka, "a")
+    c.put(kb, "b")
+    assert ka in c and kc not in c
+    assert c.hits == 0 and c.misses == 0  # no counter bump
+    c.put(kc, "c")
+    # the peek did not refresh ka's recency: it was still LRU and left
+    assert c.get(ka) is None and c.get(kb) == "b" and c.get(kc) == "c"
+
+
+def test_buckets_normalized_ascending():
+    cfg = ServeConfig(max_batch=100, buckets=(128, 8, 32))
+    assert cfg.buckets == (8, 32, 128)
 
 
 # ----------------------------------------------------------------------
