@@ -28,7 +28,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import assert_not_interpret, csv_row, timeit_us
+from benchmarks.common import assert_not_interpret, csv_row, timed_call
 
 
 def run(n_devices: int = 64, k: int = 10, score_batch: int = 2048):
@@ -92,8 +92,10 @@ def run(n_devices: int = 64, k: int = 10, score_batch: int = 2048):
     xq = xs[:score_batch]
     if len(xq) < score_batch:  # smoke populations have few test rows
         xq = np.tile(xq, (-(-score_batch // len(xq)), 1))[:score_batch]
-    fp32_us = timeit_us(lambda: fp32_ens.predict(xq), repeats=3, warmup=1)
-    q8_us = timeit_us(lambda: q8_ens.predict(xq), repeats=3, warmup=1)
+    fp32_us = timed_call("comm.fp32_predict", lambda: fp32_ens.predict(xq),
+                         repeats=3, warmup=1)
+    q8_us = timed_call("comm.q8_predict", lambda: q8_ens.predict(xq),
+                       repeats=3, warmup=1)
     rows.append(csv_row("comm.q8_score.fp32_us", f"{fp32_us:.0f}",
                         f"fused fp32 path, batch {len(xq)} x k={k}"))
     rows.append(csv_row("comm.q8_score.int8_us", f"{q8_us:.0f}",

@@ -3,8 +3,9 @@ minutes on one CPU while preserving the paper's device-count regimes."""
 from __future__ import annotations
 
 import os
-import time
 from typing import Callable
+
+from repro.obs.profile import timed_call as _obs_timed_call
 
 
 def assert_not_interpret() -> None:
@@ -21,13 +22,15 @@ SCALES = {"gleam": 1.0, "emnist": 0.02, "sent140": 0.02}
 KS = (1, 10, 50, 100)
 
 
-def timeit_us(fn: Callable, repeats: int = 5, warmup: int = 2) -> float:
-    for _ in range(warmup):
-        fn()
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        fn()
-    return (time.perf_counter() - t0) / repeats * 1e6
+def timed_call(name: str, fn: Callable, repeats: int = 5, warmup: int = 2) -> float:
+    """Mean microseconds per call of ``fn()``: warmup, then ``repeats``
+    timed calls, each blocked to completion (``jax.block_until_ready``,
+    a no-op on host arrays). Backed by ``repro.obs.profile.timed_call``,
+    so when a tracer is active every timed repeat is also a
+    ``cat="bench"`` span — CSV numbers and trace spans agree by
+    construction. Replaces the per-benchmark copies of the
+    warmup/block/time loop."""
+    return _obs_timed_call(name, fn, repeats=repeats, warmup=warmup)
 
 
 def csv_row(name: str, value, derived: str = "") -> str:

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 
-from benchmarks.common import csv_row, timeit_us
+from benchmarks.common import csv_row, timed_call
 
 
 def run():
@@ -19,8 +19,7 @@ def run():
         x1 = jax.random.normal(key, (m, d))
         x2 = jax.random.normal(key, (n, d))
         f = jax.jit(lambda a, b: ref.rbf_gram_ref(a, b, 0.5))
-        f(x1, x2).block_until_ready()
-        us = timeit_us(lambda: f(x1, x2).block_until_ready())
+        us = timed_call(f"rbf_gram.{m}x{n}x{d}", lambda: f(x1, x2))
         flops = 2 * m * n * d
         rows.append(csv_row(f"kernel.rbf_gram.{m}x{n}x{d}", f"{us:.1f}",
                             f"us_per_call; {flops / us / 1e3:.2f} GFLOP/s (jnp ref)"))
@@ -32,8 +31,8 @@ def run():
         coef = jax.random.normal(ks[2], (k, n))
         gammas = jax.random.uniform(ks[3], (k,), minval=0.1, maxval=1.0)
         f = jax.jit(ref.ensemble_score_ref)
-        f(x, sup, coef, gammas).block_until_ready()
-        us = timeit_us(lambda: f(x, sup, coef, gammas).block_until_ready())
+        us = timed_call(f"ensemble_score.b{b}k{k}n{n}d{d}",
+                        lambda: f(x, sup, coef, gammas))
         flops = 2 * k * b * n * d
         rows.append(csv_row(f"kernel.ensemble_score.b{b}k{k}n{n}d{d}", f"{us:.1f}",
                             f"us_per_call; {flops / us / 1e3:.2f} GFLOP/s (jnp ref)"))
@@ -44,8 +43,7 @@ def run():
         k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
         v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
         f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
-        f(q, k, v).block_until_ready()
-        us = timeit_us(lambda: f(q, k, v).block_until_ready())
+        us = timed_call(f"attention.B{B}S{S}H{H}K{K}", lambda: f(q, k, v))
         flops = 4 * B * H * S * S * hd
         rows.append(csv_row(f"kernel.attention.B{B}S{S}H{H}K{K}", f"{us:.1f}",
                             f"us_per_call; {flops / us / 1e3:.2f} GFLOP/s (jnp ref)"))

@@ -26,7 +26,7 @@ from repro.core import Ensemble
 from repro.core.svm import SVMModel
 from repro.serve import EnsembleScorer, ServeConfig
 
-from benchmarks.common import assert_not_interpret, csv_row, timeit_us
+from benchmarks.common import assert_not_interpret, csv_row, timed_call
 
 
 def _make_ensemble(k: int, n: int = 200, d: int = 32, seed: int = 0) -> Ensemble:
@@ -54,8 +54,11 @@ def run():
 
     for k in (8, 32):
         ens = _make_ensemble(k, d=d)
-        us_padded = timeit_us(lambda: ens.predict_padded(x), repeats=3, warmup=1)
-        us_fused = timeit_us(lambda: ens.predict(x), repeats=3, warmup=1)
+        us_padded = timed_call(f"serve.padded.k{k}",
+                               lambda: ens.predict_padded(x),
+                               repeats=3, warmup=1)
+        us_fused = timed_call(f"serve.fused.k{k}", lambda: ens.predict(x),
+                              repeats=3, warmup=1)
         speedup = us_padded / max(us_fused, 1e-9)
         rows.append(csv_row(f"serve.padded.k{k}", f"{us_padded:.0f}",
                             f"us_per_call; batch={batch}"))

@@ -113,7 +113,8 @@ def _class_blocks(tenants: dict) -> dict:
 
 
 def _run_cell(n_tenants: int, load: float, *, horizon_ms: float, seed: int,
-              pool_size: int, serve, fleet_config, quota: int, dim: int):
+              pool_size: int, serve, fleet_config, quota: int, dim: int,
+              tracer=None):
     """One (tenant count, offered load) cell: fresh registry + fleet,
     full trace, drained summary. Returns (summary, n_requests)."""
     from repro.fleet import (ServeFleet, nominal_capacity_qps, open_loop_trace)
@@ -125,7 +126,7 @@ def _run_cell(n_tenants: int, load: float, *, horizon_ms: float, seed: int,
         {name: rate for name in registry.names()},
         horizon_ms=horizon_ms, dim=dim, seed=seed, pool_size=pool_size,
     )
-    fleet = ServeFleet(registry, fleet_config)
+    fleet = ServeFleet(registry, fleet_config, tracer=tracer)
     summary = fleet.run(trace, horizon_ms=horizon_ms)
     return summary, len(trace)
 
@@ -196,6 +197,47 @@ def run_determinism(n_tenants: int, load: float, **cell_kwargs):
         {"repeat_identical": True, "n_tenants": n_tenants,
          "load_x_capacity": load},
     )
+
+
+def run_trace(json_path=None, n_tenants: int = 2, load: float = 2.0,
+              horizon_ms: float = 8.0, seed: int = 7):
+    """The deterministic fleet-trace baseline: one small overloaded cell
+    traced through ``ServeFleet`` on explicit simulated-ms timestamps.
+    Every event is CostModel arithmetic, counts, and tenant names — no
+    wall-clock, no accelerator scores — so the exported trace JSON is
+    byte-identical on any host and is committed as
+    ``benchmarks/fleet_trace_baseline.json``, diffed in CI exactly like
+    ``serve_load_bench.json``. Overload (2x capacity) is deliberate:
+    the baseline must contain shed instants as well as execute spans."""
+    from repro.fleet import CostModel, FleetConfig
+    from repro.obs import Tracer
+    from repro.serve import ServeConfig
+
+    serve = ServeConfig(max_batch=32, max_queue=4096, buckets=(8, 32),
+                        cache_size=256)
+    fleet_config = FleetConfig(n_servers=2, max_global_queue=1024,
+                               cost=CostModel())
+    cell_kwargs = dict(horizon_ms=horizon_ms, seed=seed, pool_size=256,
+                       serve=serve, fleet_config=fleet_config, quota=256,
+                       dim=8)
+
+    def one_trace() -> str:
+        tracer = Tracer(process_name="fleet (simulated ms)")
+        _run_cell(n_tenants, load, tracer=tracer, **cell_kwargs)
+        return tracer.to_json()
+
+    a, b = one_trace(), one_trace()
+    assert a == b, "fleet trace not byte-identical across replays"
+    if json_path is None:
+        json_path = os.path.join(os.path.dirname(__file__),
+                                 "fleet_trace_baseline.json")
+    with open(json_path, "w") as f:
+        f.write(a)
+        f.write("\n")
+    n_events = len(json.loads(a)["traceEvents"])
+    return [csv_row("fleet.trace", json_path,
+                    f"{n_events} deterministic events (t{n_tenants}, "
+                    f"{load:g}x, {horizon_ms:g}ms horizon)")]
 
 
 def run(tenant_counts=(2, 4, 8), loads=(0.25, 0.5, 1.0, 1.5, 2.0, 3.0),
@@ -272,7 +314,11 @@ if __name__ == "__main__":
     out = None
     if "--out" in argv:
         out = argv[argv.index("--out") + 1]
-    if "smoke" in argv or "--smoke" in argv:
+    if "trace" in argv or "--trace" in argv:
+        # regenerate (or, with --out, reproduce elsewhere) the committed
+        # deterministic fleet-trace baseline
+        print("\n".join(run_trace(json_path=out)))
+    elif "smoke" in argv or "--smoke" in argv:
         # tier-1 CI lanes: same grid shape (>= 2 tenant counts x >= 3
         # loads), shorter horizon — the curves stay meaningful because
         # the metrics are simulated-time, only wall cost shrinks

@@ -330,20 +330,34 @@ def run(sizes=(128, 512), repeats: int = 3, json_path=None,
 
 
 if __name__ == "__main__":
+    import contextlib
+
+    from repro.obs import Tracer, use_tracer
+
     mode = sys.argv[1] if len(sys.argv) > 1 and not sys.argv[1].startswith("-") \
         else "full"
     out = None
     if "--out" in sys.argv:
         out = sys.argv[sys.argv.index("--out") + 1]
-    if mode == "streaming-smoke":
-        # tier-1 CI lanes: streaming machinery + equivalence only,
-        # fast enough to ride every PR in both mesh lanes
-        print("\n".join(run(json_path=out, streaming_only=True,
-                            streaming_sizes=(10_000,),
-                            equiv_devices=128, equiv_chunk=48)))
-    elif mode == "smoke":
-        print("\n".join(run(sizes=(64,), repeats=2, json_path=out,
-                            streaming_sizes=(2_000, 10_000),
-                            equiv_devices=128, equiv_chunk=48)))
-    else:
-        print("\n".join(run(json_path=out)))
+    trace_path = None
+    if "--trace" in sys.argv:
+        trace_path = sys.argv[sys.argv.index("--trace") + 1]
+    tracer = Tracer(process_name="shard_bench") if trace_path else None
+    stack = contextlib.ExitStack()
+    if tracer is not None:
+        stack.enter_context(use_tracer(tracer))
+    with stack:
+        if mode == "streaming-smoke":
+            # tier-1 CI lanes: streaming machinery + equivalence only,
+            # fast enough to ride every PR in both mesh lanes
+            print("\n".join(run(json_path=out, streaming_only=True,
+                                streaming_sizes=(10_000,),
+                                equiv_devices=128, equiv_chunk=48)))
+        elif mode == "smoke":
+            print("\n".join(run(sizes=(64,), repeats=2, json_path=out,
+                                streaming_sizes=(2_000, 10_000),
+                                equiv_devices=128, equiv_chunk=48)))
+        else:
+            print("\n".join(run(json_path=out)))
+    if tracer is not None:
+        tracer.export(trace_path)

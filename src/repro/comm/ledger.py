@@ -33,6 +33,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterator, List, Optional, Tuple
 
+from repro.obs.trace import current_tracer
+
 DIRECTIONS = ("up", "down")
 KINDS = ("metadata", "model_upload", "ensemble_download", "student_download")
 
@@ -99,6 +101,10 @@ class CommLedger:
             self._fold(direction, kind, tag, codec, 1, nbytes)
         else:
             self.events.append(ev)
+        tracer = current_tracer()
+        if tracer.enabled:
+            tracer.instant(f"comm.{kind}", cat="comm", direction=direction,
+                           nbytes=nbytes, tag=tag)
         return ev
 
     def record_batch(
@@ -126,6 +132,12 @@ class CommLedger:
                 CommEvent(direction, kind, nbytes_each, codec=codec, tag=tag)
                 for _ in range(count)
             )
+        tracer = current_tracer()
+        if tracer.enabled:
+            # one instant per batch, not per message — the streamed
+            # round's 10^6-device metadata exchange stays one event
+            tracer.instant(f"comm.{kind}", cat="comm", direction=direction,
+                           nbytes=count * nbytes_each, count=count, tag=tag)
 
     def __len__(self) -> int:
         return self._count if self.compact else len(self.events)

@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core.svm import train_svm
 from repro.core.ensemble import Ensemble
+from repro.obs.trace import current_tracer
 from repro.data.federated import FederatedDataset, DeviceData
 from repro.data.partition import pool_devices
 from repro.utils.metrics import roc_auc, streaming_grouped_auc
@@ -150,14 +151,18 @@ def run_protocol(
     elif distill.proxy_size == 0 and distill_proxy > 0:
         distill = dataclasses.replace(distill, proxy_size=distill_proxy)
 
+    tracer = current_tracer()
     m = dataset.n_devices
-    devices = train_population(dataset, lam=lam, seed=seed, mode=engine).outcomes
+    with tracer.span("round.train", cat="round", devices=m, engine=engine):
+        devices = train_population(dataset, lam=lam, seed=seed,
+                                   mode=engine).outcomes
     reports = [d.report for d in devices]
     eligible_ids = [r.device_id for r in reports if r.eligible]
 
     # --- the wire: priced uploads, decoded models, metadata on ledger ---
-    ex = ModelExchange({d.device_id: d.model for d in devices}, reports,
-                       codec=codec, budget_bytes=budget_bytes)
+    with tracer.span("round.encode", cat="round", codec=codec):
+        ex = ModelExchange({d.device_id: d.model for d in devices}, reports,
+                           codec=codec, budget_bytes=budget_bytes)
     codec_spec = ex.codec
     log.info("trained %d local models (%s, engine=%s, codec=%s)",
              m, dataset.name, engine, codec_spec)
@@ -171,18 +176,22 @@ def run_protocol(
     local_mean = float(np.mean(local_aucs))
 
     # --- unattainable ideal: pooled-data SVM (subsampled for tractability) ---
-    pooled = pool_devices([d.splits["train"] for d in devices])
-    rng = np.random.default_rng(seed)
-    if len(pooled.y) > ideal_cap:
-        idx = rng.choice(len(pooled.y), ideal_cap, replace=False)
-        pooled = DeviceData(pooled.x[idx], pooled.y[idx])
-    ideal_model = train_svm(pooled.x, pooled.y, lam=lam)
-    ideal_mean, ideal_aucs = _mean_auc_over_devices(devices, ideal_model.predict)
+    with tracer.span("round.ideal", cat="round", cap=ideal_cap):
+        pooled = pool_devices([d.splits["train"] for d in devices])
+        rng = np.random.default_rng(seed)
+        if len(pooled.y) > ideal_cap:
+            idx = rng.choice(len(pooled.y), ideal_cap, replace=False)
+            pooled = DeviceData(pooled.x[idx], pooled.y[idx])
+        ideal_model = train_svm(pooled.x, pooled.y, lam=lam)
+        ideal_mean, ideal_aucs = _mean_auc_over_devices(
+            devices, ideal_model.predict)
 
     # --- ensembles per strategy and k (evaluated on DECODED models) ---
     ensemble_auc: Dict[str, Dict[int, float]] = {}
     for strat in strategies:
         ensemble_auc[strat] = {}
+        strat_span = tracer.span("round.select", cat="round", strategy=strat)
+        strat_span.__enter__()
         for k in ks:
             if strat == "random":
                 trials = []
@@ -206,12 +215,14 @@ def run_protocol(
                     devices, partial(ens.predict, chunk=eval_chunk), eval_chunk)
                 ensemble_auc[strat][k] = auc
             ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
+        strat_span.__exit__(None, None, None)
         log.info("%s/%s: %s", dataset.name, strat, ensemble_auc[strat])
 
     # --- full ensemble of all eligible devices ---
-    full_ens = Ensemble([ex.received(i) for i in eligible_ids])
-    full_auc, full_aucs = _mean_auc_over_devices(
-        devices, partial(full_ens.predict, chunk=eval_chunk), eval_chunk)
+    with tracer.span("round.eval", cat="round", ensemble=len(eligible_ids)):
+        full_ens = Ensemble([ex.received(i) for i in eligible_ids])
+        full_auc, full_aucs = _mean_auc_over_devices(
+            devices, partial(full_ens.predict, chunk=eval_chunk), eval_chunk)
     ex.record_uploads(ledger, eligible_ids, "upload_full")
 
     best = {s: max(v.values()) for s, v in ensemble_auc.items() if v}

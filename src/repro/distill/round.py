@@ -18,6 +18,7 @@ import numpy as np
 from repro.distill.config import DistillConfig
 from repro.distill.proxy import make_proxy
 from repro.distill.solvers import distill_rng, distill_teacher
+from repro.obs.trace import current_tracer
 
 
 @dataclasses.dataclass
@@ -52,16 +53,19 @@ def distill_round(
     """
     from repro.comm import decode, encode  # deferred: comm <-> core cycle
 
-    params = dict(cfg.proxy_params)
-    for key, val in dict(default_proxy_params or {}).items():
-        params.setdefault(key, val)
-    proxy = make_proxy(cfg.proxy, n=cfg.proxy_size, rng=distill_rng(seed),
-                       devices=devices, dim=dim,
-                       split_counts=split_counts, fetch_split=fetch_split,
-                       **params)
-    student = distill_teacher(teacher_predict, proxy, cfg=cfg, seed=seed)
-    codec = cfg.codec or round_codec
-    wire = encode(student, codec)
-    ledger.record("down", "student_download", len(wire),
-                  codec=codec, tag="download_distilled")
+    with current_tracer().span("distill.round", cat="distill",
+                               solver=cfg.solver, proxy=cfg.proxy,
+                               proxy_size=cfg.proxy_size):
+        params = dict(cfg.proxy_params)
+        for key, val in dict(default_proxy_params or {}).items():
+            params.setdefault(key, val)
+        proxy = make_proxy(cfg.proxy, n=cfg.proxy_size, rng=distill_rng(seed),
+                           devices=devices, dim=dim,
+                           split_counts=split_counts, fetch_split=fetch_split,
+                           **params)
+        student = distill_teacher(teacher_predict, proxy, cfg=cfg, seed=seed)
+        codec = cfg.codec or round_codec
+        wire = encode(student, codec)
+        ledger.record("down", "student_download", len(wire),
+                      codec=codec, tag="download_distilled")
     return DistilledRound(decode(wire), codec, len(wire), len(proxy))

@@ -47,6 +47,7 @@ from typing import Deque, Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.fleet.clock import CostModel, EventQueue, SimClock
+from repro.obs.trace import NULL_TRACER
 from repro.fleet.metrics import FleetMetrics
 from repro.fleet.registry import Tenant, TenantRegistry, shard_for
 from repro.fleet.traffic import Arrival
@@ -102,12 +103,17 @@ class ServeFleet:
         config: FleetConfig = FleetConfig(),
         *,
         keep_results: bool = False,
+        tracer=None,
     ):
         if len(registry) == 0:
             raise ValueError("fleet needs at least one registered tenant")
         self.registry = registry
         self.config = config
         self.clock = SimClock()
+        # fleet events always carry EXPLICIT simulated-ms timestamps —
+        # never a wall-clock read — so the trace is byte-reproducible
+        # from the traffic seed in any tracer (docs/TESTING.md)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = FleetMetrics(registry.names())
         self.results: Optional[Dict[int, np.ndarray]] = {} if keep_results else None
         # one MicroBatchScheduler per (tenant, cache shard) — the shard
@@ -149,10 +155,10 @@ class ServeFleet:
 
         # admission control: bounded global queue, then per-tenant quota
         if self._queued_total >= self.config.max_global_queue:
-            self.metrics.record_shed(tenant_name, "queue_full")
+            self._shed(tenant_name, "queue_full")
             return rid
         if self._queued_by_tenant[tenant_name] >= tenant.slo.quota:
-            self.metrics.record_shed(tenant_name, "quota")
+            self._shed(tenant_name, "quota")
             return rid
 
         key = query_key(row)
@@ -163,7 +169,7 @@ class ServeFleet:
         if key not in self._scheds[tenant_name][shard].cache and (
             tenant.slo.deadline_ms < self._min_service_ms(tenant)
         ):
-            self.metrics.record_shed(tenant_name, "hopeless")
+            self._shed(tenant_name, "hopeless")
             return rid
 
         req = _Request(
@@ -200,6 +206,13 @@ class ServeFleet:
         return self.metrics.summary(horizon_ms, self.shard_stats())
 
     # -- event loop -----------------------------------------------------
+    def _shed(self, tenant_name: str, reason: str) -> None:
+        self.metrics.record_shed(tenant_name, reason)
+        if self.tracer.enabled:
+            self.tracer.instant("fleet.shed", cat="fleet",
+                                ts_us=self.clock.now_ms * 1000.0,
+                                tenant=tenant_name, reason=reason)
+
     def _min_service_ms(self, tenant: Tenant) -> float:
         return self.config.cost.min_service_ms(min(tenant.serve.buckets), tenant.cost_scale)
 
@@ -258,7 +271,7 @@ class ServeFleet:
                 self._queued_total -= 1
                 self._queued_by_tenant[tenant_name] -= 1
                 if req.key not in sched.cache and now + min_ms > req.t_deadline:
-                    self.metrics.record_shed(tenant_name, "hopeless")
+                    self._shed(tenant_name, "hopeless")
                     continue
                 batch.append(req)
             if batch:
@@ -283,6 +296,13 @@ class ServeFleet:
             calls, bucket_rows, cached_rows, tenant.cost_scale
         )
         done = self.clock.now_ms + service
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "fleet.execute", ts_us=self.clock.now_ms * 1000.0,
+                dur_us=service * 1000.0, cat="fleet", tenant=tenant_name,
+                shard=shard, batch=len(batch), calls=calls,
+                bucket_rows=bucket_rows, cached_rows=cached_rows,
+            )
         for req, ticket in zip(batch, tickets):
             out = sched.result(ticket)
             self.metrics.record_complete(

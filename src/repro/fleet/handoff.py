@@ -57,6 +57,7 @@ def serve_round_artifact(
     n_servers: int = 2,
     checkpoint_dir: Optional[str] = None,
     keep_results: bool = False,
+    tracer=None,
 ) -> dict:
     """Deploy ``model`` behind a two-SLO-class fleet and measure it
     under ``load`` x nominal capacity of open-loop Poisson traffic.
@@ -97,7 +98,8 @@ def serve_round_artifact(
         seed=seed,
         pool_size=128,
     )
-    fleet = ServeFleet(registry, config, keep_results=keep_results)
+    fleet = ServeFleet(registry, config, keep_results=keep_results,
+                       tracer=tracer)
     out = fleet.run(trace, horizon_ms=horizon_ms)
     out["handoff"] = {
         "codec": codec,

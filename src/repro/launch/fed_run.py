@@ -48,6 +48,7 @@ metrics (latency percentiles, goodput, shed rate) to the report under
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -59,6 +60,7 @@ from repro.configs import get_config
 from repro.core import deepfed
 from repro.data import make_federated_lm_data, token_batches
 from repro.models import ShardCtx
+from repro.obs import Tracer, current_tracer, default_registry, envelope, use_tracer
 from repro.utils.logging import get_logger
 
 log = get_logger("fed_run")
@@ -113,7 +115,18 @@ def run_sim(args) -> dict:
 
         mesh_used = make_shard_ctx(args.mesh).n_shards
 
-    report = run_population(cfg, on_update=progress)
+    # --trace: one wall-clock tracer for the round, one explicit-ts
+    # sub-tracer (pid 2 = its own Perfetto process track) for the
+    # fleet's simulated-ms events; merged into a single trace file
+    tracer = fleet_tracer = None
+    stack = contextlib.ExitStack()
+    if args.trace:
+        tracer = Tracer(pid=1, process_name="fed_run")
+        fleet_tracer = Tracer(pid=2, process_name="fleet (simulated ms)")
+        stack.enter_context(use_tracer(tracer))
+
+    with stack:
+        report = run_population(cfg, on_update=progress)
     out = {
         "mode": "sim",
         "scenario": report.scenario,
@@ -157,7 +170,20 @@ def run_sim(args) -> dict:
             seed=args.seed,
             horizon_ms=args.fleet_horizon_ms,
             load=args.fleet_load,
+            tracer=fleet_tracer,
         )
+    # the schema-versioned observability envelope: registry counters
+    # (engine chunks/groups/devices) + the round's exact comm ledger
+    out["obs"] = envelope(
+        default_registry(),
+        comm=report.ledger,
+        fleet=out.get("fleet"),
+    )
+    if tracer is not None:
+        tracer.merge(fleet_tracer)
+        if tracer.export(args.trace):
+            log.info("trace written to %s (open at https://ui.perfetto.dev)",
+                     args.trace)
     print(json.dumps(out, indent=2))
     if args.out:
         with open(args.out, "w") as f:
@@ -226,6 +252,10 @@ def main(argv=None):
     ap.add_argument("--distill-loss", default="kl", choices=["kl", "l2"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(spans from engine/round/comm/distill/fleet; "
+                         "open at https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     if args.mode == "sim":
@@ -234,6 +264,12 @@ def main(argv=None):
     cfg = get_config(args.arch).reduced()
     M, B, S = args.clients, args.batch, args.seq
     log.info("one-shot FL: %d clients of reduced %s", M, args.arch)
+
+    tracer = Tracer(process_name="fed_run") if args.trace else None
+    stack = contextlib.ExitStack()
+    if tracer is not None:
+        stack.enter_context(use_tracer(tracer))
+    stack.__enter__()
 
     clients = make_federated_lm_data(M, cfg.vocab, args.tokens_per_client, seed=args.seed)
     wins = []
@@ -247,7 +283,8 @@ def main(argv=None):
     stacked = deepfed.stacked_init(cfg, M, key)
     train = deepfed.make_local_train(cfg, lr=args.lr)
     t0 = time.time()
-    stacked, losses = train(stacked, wins)
+    with current_tracer().span("lm.local_train", cat="round", clients=M):
+        stacked, losses = train(stacked, wins)
     t_local = time.time() - t0
     log.info(
         "local training: loss %.3f -> %.3f in %.1fs (all %d clients in parallel)",
@@ -267,10 +304,12 @@ def main(argv=None):
         np.stack([next(token_batches(clients[i % M], B, S, seed=args.seed + 13)) for i in range(M)])
     )
     t0 = time.time()
-    student, dlosses = deepfed.distill_to_student(
-        cfg, cfg, stacked, proxy, steps=args.distill_steps, lr=args.lr,
-        loss_kind=args.distill_loss, seed=args.seed,
-    )
+    with current_tracer().span("lm.distill", cat="distill",
+                               steps=args.distill_steps):
+        student, dlosses = deepfed.distill_to_student(
+            cfg, cfg, stacked, proxy, steps=args.distill_steps, lr=args.lr,
+            loss_kind=args.distill_loss, seed=args.seed,
+        )
     t_distill = time.time() - t0
     student_nll = deepfed.ensemble_eval_loss(
         jax.tree.map(lambda x: x[None], student), cfg, test
@@ -290,6 +329,9 @@ def main(argv=None):
         "fedavg10_comm_bytes": fedavg_equiv,
         "comm_reduction_vs_fedavg10": fedavg_equiv["total"] / max(comm["upload"], 1.0),
     }
+    stack.__exit__(None, None, None)
+    if tracer is not None and tracer.export(args.trace):
+        log.info("trace written to %s", args.trace)
     print(json.dumps(report, indent=2))
     if args.out:
         with open(args.out, "w") as f:

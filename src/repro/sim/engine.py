@@ -93,6 +93,8 @@ from repro.core.svm import (
 from repro.core.selection import DeviceReport
 from repro.data.federated import DeviceData, FederatedDataset
 from repro.data.partition import derive_device_seed, split_train_test_val
+from repro.obs.registry import default_registry
+from repro.obs.trace import current_tracer
 from repro.utils.metrics import roc_auc
 from repro.utils.logging import get_logger
 
@@ -387,17 +389,28 @@ def _train_buckets(by_bucket, lam, epochs, group_cap, shard):
     """Yield (bucket, outcomes, seconds) for every bucket group, caps
     floored to powers of two so `_train_bucket_group`'s pow2 group
     padding cannot overshoot the Gram memory budget; huge buckets
-    (rare, giant devices) drop below 8 per group."""
+    (rare, giant devices) drop below 8 per group.
+
+    Each group is a ``cat="engine"`` span; the span closes before the
+    yield so consumer work between yields never lands inside it."""
+    tracer = current_tracer()
+    reg = default_registry()
     for bucket in sorted(by_bucket):
         members = by_bucket[bucket]
         cap = _bucket_group_caps(bucket, group_cap, shard)
         for lo in range(0, len(members), cap):
             t0 = time.time()
-            outs = _train_bucket_group(
-                members[lo : lo + cap], bucket, lam, epochs,
-                pad_floor=min(8, cap), shard=shard,
-            )
-            yield bucket, outs, time.time() - t0
+            with tracer.span("engine.group", cat="engine", bucket=bucket,
+                             members=len(members[lo : lo + cap]), cap=cap):
+                outs = _train_bucket_group(
+                    members[lo : lo + cap], bucket, lam, epochs,
+                    pad_floor=min(8, cap), shard=shard,
+                )
+            secs = time.time() - t0
+            reg.counter("engine.groups").inc()
+            reg.counter("engine.devices_trained").inc(len(outs))
+            reg.histogram("engine.group_seconds").observe(secs)
+            yield bucket, outs, secs
 
 
 def iter_population(
@@ -535,26 +548,31 @@ def _iter_streamed(
         total = sum(1 for i in range(stream.n_devices) if admitted(i))
     done = 0
 
+    tracer = current_tracer()
+    reg = default_registry()
     for lo in range(0, stream.n_devices, chunk_devices):
-        t0 = time.time()
-        fallback: List[DeviceOutcome] = []
-        by_bucket: Dict[int, List[tuple]] = {}
-        for i in range(lo, min(lo + chunk_devices, stream.n_devices)):
-            if not admitted(i):
-                continue
-            bucket, payload = _classify_device(i, stream.device(i),
-                                               min_samples, seed=seed)
-            if bucket is None:
-                fallback.append(payload)
-            else:
-                by_bucket.setdefault(bucket, []).append((i, payload))
-        if fallback:
-            done += len(fallback)
-            yield GroupUpdate(0, fallback, time.time() - t0, done, total)
-        for bucket, outs, secs in _train_buckets(by_bucket, lam, epochs,
-                                                 group_cap, shard):
-            done += len(outs)
-            yield GroupUpdate(bucket, outs, secs, done, total)
+        hi = min(lo + chunk_devices, stream.n_devices)
+        with tracer.span("engine.chunk", cat="engine", lo=lo, hi=hi):
+            t0 = time.time()
+            fallback: List[DeviceOutcome] = []
+            by_bucket: Dict[int, List[tuple]] = {}
+            for i in range(lo, hi):
+                if not admitted(i):
+                    continue
+                bucket, payload = _classify_device(i, stream.device(i),
+                                                   min_samples, seed=seed)
+                if bucket is None:
+                    fallback.append(payload)
+                else:
+                    by_bucket.setdefault(bucket, []).append((i, payload))
+            if fallback:
+                done += len(fallback)
+                yield GroupUpdate(0, fallback, time.time() - t0, done, total)
+            for bucket, outs, secs in _train_buckets(by_bucket, lam, epochs,
+                                                     group_cap, shard):
+                done += len(outs)
+                yield GroupUpdate(bucket, outs, secs, done, total)
+        reg.counter("engine.chunks").inc()
         # the chunk's devices die with these locals on the next pass —
         # nothing population-sized is ever retained here
 

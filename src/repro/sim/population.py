@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.comm import CommLedger, ModelExchange, StreamExchange
 from repro.core.ensemble import Ensemble
+from repro.obs.trace import current_tracer
 from repro.core.selection import ReportColumns
 from repro.distill import DistillConfig, distill_round
 from repro.sim.engine import (
@@ -148,10 +149,14 @@ def run_population(
         )
     ds = federation.dataset
 
-    pop = train_population(
-        ds, on_update=on_update, lam=cfg.lam, seed=cfg.seed, mode=cfg.engine,
-        available=federation.available, shards=cfg.mesh_shards,
-    )
+    tracer = current_tracer()
+    with tracer.span("round.train", cat="round", engine=cfg.engine,
+                     devices=ds.n_devices):
+        pop = train_population(
+            ds, on_update=on_update, lam=cfg.lam, seed=cfg.seed,
+            mode=cfg.engine, available=federation.available,
+            shards=cfg.mesh_shards,
+        )
     outcomes, train_s = pop.outcomes, pop.seconds
 
     reports = pop.reports
@@ -160,8 +165,9 @@ def run_population(
 
     # --- communication: wire codec + typed byte ledger (repro.comm);
     # only devices that showed up report metadata ---
-    ex = ModelExchange({o.device_id: o.model for o in outcomes}, reports,
-                       codec=cfg.codec, budget_bytes=cfg.budget_bytes)
+    with tracer.span("round.encode", cat="round", codec=cfg.codec):
+        ex = ModelExchange({o.device_id: o.model for o in outcomes}, reports,
+                           codec=cfg.codec, budget_bytes=cfg.budget_bytes)
     ledger = CommLedger()
     ex.record_metadata(ledger)
 
@@ -190,19 +196,22 @@ def run_population(
     for strat in cfg.strategies:
         ensemble_auc[strat] = {}
         time_to_aggregate[strat] = {}
-        for k in cfg.ks:
-            ids = ex.pick(strat, k, cfg.seed)
-            if not ids:
-                continue
-            ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
-            ens = Ensemble([ex.received(i) for i in ids])
-            ensemble_auc[strat][k] = mean_auc(
-                partial(ens.predict, chunk=cfg.eval_chunk)
-            )
-            if federation.channel is not None:
-                time_to_aggregate[strat][k] = federation.channel.time_to_aggregate(
-                    {i: len(ex.upload(i)) for i in ids}
+        with tracer.span("round.select", cat="round", strategy=strat):
+            for k in cfg.ks:
+                ids = ex.pick(strat, k, cfg.seed)
+                if not ids:
+                    continue
+                ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
+                ens = Ensemble([ex.received(i) for i in ids])
+                ensemble_auc[strat][k] = mean_auc(
+                    partial(ens.predict, chunk=cfg.eval_chunk)
                 )
+                if federation.channel is not None:
+                    time_to_aggregate[strat][k] = (
+                        federation.channel.time_to_aggregate(
+                            {i: len(ex.upload(i)) for i in ids}
+                        )
+                    )
         log.info("%s/%s: %s", ds.name, strat, ensemble_auc[strat])
 
     # --- server-side distillation of the best selected ensemble (the
@@ -296,21 +305,25 @@ def _run_streamed(
     n_val_l: list = []
     local_auc_l: list = []
 
+    tracer = current_tracer()
     t0 = time.time()
-    for update in iter_population(
-        stream, lam=cfg.lam, seed=cfg.seed, mode="streamed",
-        shards=cfg.mesh_shards, chunk_devices=cfg.chunk_devices,
-    ):
-        for o in update.outcomes:
-            r = o.report
-            ids_l.append(r.device_id)
-            n_train_l.append(r.n_train)
-            val_auc_l.append(r.val_auc)
-            elig_l.append(r.eligible)
-            n_val_l.append(o.splits["val"].n)
-            local_auc_l.append(o.local_test_auc)
-        if on_update is not None:
-            on_update(update)
+    with tracer.span("round.train", cat="round", engine="streamed",
+                     devices=stream.n_devices,
+                     chunk_devices=cfg.chunk_devices):
+        for update in iter_population(
+            stream, lam=cfg.lam, seed=cfg.seed, mode="streamed",
+            shards=cfg.mesh_shards, chunk_devices=cfg.chunk_devices,
+        ):
+            for o in update.outcomes:
+                r = o.report
+                ids_l.append(r.device_id)
+                n_train_l.append(r.n_train)
+                val_auc_l.append(r.val_auc)
+                elig_l.append(r.eligible)
+                n_val_l.append(o.splits["val"].n)
+                local_auc_l.append(o.local_test_auc)
+            if on_update is not None:
+                on_update(update)
     train_s = time.time() - t0
 
     # outcomes arrive fallback-first within each chunk; id order (the
@@ -335,8 +348,9 @@ def _run_streamed(
                               shards=cfg.mesh_shards)
         return {i: o.model for i, o in outs.items()}
 
-    ex = StreamExchange(cols, provider, dim=stream.dim, codec=cfg.codec,
-                        budget_bytes=cfg.budget_bytes)
+    with tracer.span("round.encode", cat="round", codec=cfg.codec):
+        ex = StreamExchange(cols, provider, dim=stream.dim, codec=cfg.codec,
+                            budget_bytes=cfg.budget_bytes)
     ledger = CommLedger(compact=True)
     ex.record_metadata(ledger)
 
@@ -366,19 +380,20 @@ def _run_streamed(
     for strat in cfg.strategies:
         ensemble_auc[strat] = {}
         time_to_aggregate[strat] = {}
-        for k in cfg.ks:
-            ids = ex.pick(strat, k, cfg.seed)
-            if not ids:
-                continue
-            ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
-            ens = Ensemble([ex.received(i) for i in ids])
-            ensemble_auc[strat][k] = mean_auc(
-                partial(ens.predict, chunk=cfg.eval_chunk)
-            )
-            if channel is not None:
-                time_to_aggregate[strat][k] = channel.time_to_aggregate(
-                    {i: len(ex.upload(i)) for i in ids}
+        with tracer.span("round.select", cat="round", strategy=strat):
+            for k in cfg.ks:
+                ids = ex.pick(strat, k, cfg.seed)
+                if not ids:
+                    continue
+                ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
+                ens = Ensemble([ex.received(i) for i in ids])
+                ensemble_auc[strat][k] = mean_auc(
+                    partial(ens.predict, chunk=cfg.eval_chunk)
                 )
+                if channel is not None:
+                    time_to_aggregate[strat][k] = channel.time_to_aggregate(
+                        {i: len(ex.upload(i)) for i in ids}
+                    )
         log.info("%s/%s: %s", name, strat, ensemble_auc[strat])
 
     student = None

@@ -11,7 +11,7 @@ from repro.utils.trees import (
     tree_count_params,
 )
 from repro.utils.metrics import roc_auc, accuracy, binary_cross_entropy
-from repro.utils.logging import get_logger
+from repro.utils.logging import get_logger, kv
 
 __all__ = [
     "tree_zeros_like",
@@ -28,4 +28,5 @@ __all__ = [
     "accuracy",
     "binary_cross_entropy",
     "get_logger",
+    "kv",
 ]
