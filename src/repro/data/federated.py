@@ -26,6 +26,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.utils.seeds import derive_device_seed, derive_stream_seed
+
 
 @dataclasses.dataclass
 class DeviceData:
@@ -103,7 +105,7 @@ def _make_gaussian_federated(
     sizes = _device_sizes(rng, n_devices, lo, hi, total)
     devices = []
     for t in range(n_devices):
-        drng = np.random.default_rng(seed * 100003 + t)
+        drng = np.random.default_rng(derive_device_seed(seed, t))
         pos_frac = float(np.clip(drng.beta(2.5, 2.5), 0.05, 0.95))
         shift = shift_scale * drng.normal(0, 1, dim).astype(np.float32)
         x, y = concept(drng, int(sizes[t]), pos_frac, shift, noise)
@@ -145,7 +147,7 @@ def make_sent140_like(seed: int = 0, scale: float = 1.0, dim: int = 64) -> Feder
     neg_words = (rng.random(dim) < 0.25) & ~pos_words
     devices = []
     for t in range(n_dev):
-        drng = np.random.default_rng(seed * 100003 + t)
+        drng = np.random.default_rng(derive_device_seed(seed, t))
         n = int(sizes[t])
         user_vocab = drng.dirichlet(0.3 * np.ones(dim))  # user word preferences
         pos_frac = float(np.clip(drng.beta(2.0, 2.0), 0.05, 0.95))
@@ -173,12 +175,12 @@ def make_cohort_dataset(
     fails on the minority semantics, while per-cohort ensembles do not.
     Device i belongs to cohort i % n_cohorts (ground truth for tests).
     """
-    rng = np.random.default_rng(seed + 17)
+    rng = np.random.default_rng(derive_stream_seed(seed, "cohort-concept"))
     concept = _gaussian_concept(rng, dim, sep=2.5)
     sizes = _device_sizes(rng, n_devices, lo, hi, n_devices * (lo + hi) // 2)
     devices = []
     for t in range(n_devices):
-        drng = np.random.default_rng(seed * 9973 + t)
+        drng = np.random.default_rng(derive_device_seed(seed, t))
         cohort = t % n_cohorts
         pos_frac = float(np.clip(drng.beta(3.0, 3.0), 0.2, 0.8))
         shift = 0.2 * drng.normal(0, 1, dim).astype(np.float32)

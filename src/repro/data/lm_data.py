@@ -11,6 +11,8 @@ from typing import Iterator, List, Tuple
 
 import numpy as np
 
+from repro.utils.seeds import derive_device_seed
+
 
 def _client_transition(rng: np.random.Generator, vocab: int, branching: int = 8):
     """Sparse row-stochastic transition matrix as (indices, probs)."""
@@ -30,7 +32,7 @@ def make_federated_lm_data(
     """Returns one token array per client."""
     out = []
     for c in range(n_clients):
-        rng = np.random.default_rng(seed * 7919 + c)
+        rng = np.random.default_rng(derive_device_seed(seed, c))
         idx, probs = _client_transition(rng, vocab, branching)
         toks = np.empty(tokens_per_client, np.int32)
         state = int(rng.integers(vocab))

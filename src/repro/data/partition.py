@@ -6,26 +6,9 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.data.federated import DeviceData
-
-
-def derive_device_seed(seed: int, device_id: int) -> int:
-    """Collision-free per-device seed, independent of iteration order.
-
-    ``seed + device_id`` collides across (seed, id) pairs and couples
-    neighbouring devices; hashing through SeedSequence gives every
-    (run seed, device) pair an independent stream. The result depends
-    ONLY on (seed, device_id) — never on bucket layout, group batching,
-    or mesh shard count — so the same run seed reproduces the same
-    federation on every engine tier and mesh shape (pinned by the
-    snapshot + resharding regression tests).
-
-    Negative / arbitrary-width run seeds fold into SeedSequence's
-    uint64 entropy domain (two's complement); values already in
-    [0, 2^64) hash exactly as before, keeping historic streams intact.
-    """
-    return int(
-        np.random.SeedSequence([seed % 2**64, device_id % 2**64]).generate_state(1)[0]
-    )
+from repro.utils.seeds import derive_device_seed  # noqa: F401  (canonical home
+# is repro.utils.seeds; re-exported here because every engine tier and the
+# historic tests import it from the partition module)
 
 
 def split_train_test_val(

@@ -20,12 +20,13 @@ os.environ["XLA_FLAGS"] = (
 
 import argparse
 import json
-import time
 import traceback
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.trace import stopwatch
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, VARIANTS, get_config, shape_applicable
@@ -230,13 +231,13 @@ def run_one(
         updates["experts"] = "model"
     if updates:
         rules = rules.replace(table_updates=updates)
-    t0 = time.time()
+    elapsed = stopwatch()
     try:
         lowered = build_lowering(cfg, shape, mesh, rules)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = elapsed()
+        elapsed = stopwatch()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = elapsed()
     except Exception as e:
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
@@ -275,9 +276,9 @@ def run_one(
         rec["cost_analysis_error"] = str(e)
 
     try:
-        t0 = time.time()
+        elapsed = stopwatch()
         flops, bytes_accessed, coll = extrapolated_cost(cfg, shape, mesh, rules)
-        rec["t_probe_s"] = round(time.time() - t0, 2)
+        rec["t_probe_s"] = round(elapsed(), 2)
         rec["hlo_flops_per_chip"] = flops
         rec["hlo_bytes_per_chip"] = bytes_accessed
         rec["collectives"] = {k: int(v) for k, v in coll.items()}

@@ -50,7 +50,6 @@ from __future__ import annotations
 import argparse
 import contextlib
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +59,8 @@ from repro.configs import get_config
 from repro.core import deepfed
 from repro.data import make_federated_lm_data, token_batches
 from repro.models import ShardCtx
-from repro.obs import Tracer, current_tracer, default_registry, envelope, use_tracer
+from repro.obs import (Tracer, current_tracer, default_registry, envelope,
+                       stopwatch, use_tracer)
 from repro.utils.logging import get_logger
 
 log = get_logger("fed_run")
@@ -282,10 +282,10 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     stacked = deepfed.stacked_init(cfg, M, key)
     train = deepfed.make_local_train(cfg, lr=args.lr)
-    t0 = time.time()
+    elapsed = stopwatch()
     with current_tracer().span("lm.local_train", cat="round", clients=M):
         stacked, losses = train(stacked, wins)
-    t_local = time.time() - t0
+    t_local = elapsed()
     log.info(
         "local training: loss %.3f -> %.3f in %.1fs (all %d clients in parallel)",
         float(losses[:, 0].mean()), float(losses[:, -1].mean()), t_local, M,
@@ -303,14 +303,14 @@ def main(argv=None):
     proxy = jnp.asarray(
         np.stack([next(token_batches(clients[i % M], B, S, seed=args.seed + 13)) for i in range(M)])
     )
-    t0 = time.time()
+    elapsed = stopwatch()
     with current_tracer().span("lm.distill", cat="distill",
                                steps=args.distill_steps):
         student, dlosses = deepfed.distill_to_student(
             cfg, cfg, stacked, proxy, steps=args.distill_steps, lr=args.lr,
             loss_kind=args.distill_loss, seed=args.seed,
         )
-    t_distill = time.time() - t0
+    t_distill = elapsed()
     student_nll = deepfed.ensemble_eval_loss(
         jax.tree.map(lambda x: x[None], student), cfg, test
     )

@@ -14,11 +14,12 @@ dispatch policy the model's flash-attention path follows).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.trace import stopwatch
 
 from repro.configs import get_config
 from repro.data import make_federated_lm_data
@@ -50,17 +51,17 @@ def make_lm_score_fn(cfg, params, prefill, decode, gen: int):
         if cfg.is_encdec:
             batch["frames"] = jnp.zeros((bucket, cfg.encoder_seq, cfg.d_model), jnp.float32)
         cache = init_cache(cfg, bucket, kv_len=prompt_len + gen + 1)
-        t0 = time.time()
+        elapsed = stopwatch()
         logits, cache = prefill(params, batch, cache)
-        log.info("prefill %d x %d tokens in %.2fs", bucket, prompt_len, time.time() - t0)
+        log.info("prefill %d x %d tokens in %.2fs", bucket, prompt_len, elapsed())
         out = []
         tok = jnp.argmax(logits, axis=-1)[:, None]
-        t0 = time.time()
+        elapsed = stopwatch()
         for _ in range(gen):
             out.append(np.asarray(tok)[:, 0])
             logits, cache = decode(params, tok, cache)
             tok = jnp.argmax(logits, axis=-1)[:, None]
-        dt = time.time() - t0
+        dt = elapsed()
         log.info("decoded %d tokens/seq in %.2fs (%.1f tok/s total)", gen, dt, bucket * gen / dt)
         return np.stack(out, axis=1)  # (bucket, gen)
 

@@ -10,11 +10,12 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.trace import stopwatch
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
@@ -92,7 +93,7 @@ def main(argv=None):
         extra["frames"] = jnp.zeros((args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
 
     ckpt = CheckpointManager(args.ckpt) if args.ckpt else None
-    t0 = time.time()
+    elapsed = stopwatch()
     for step in range(args.steps):
         window = next(stream)
         batch = {"tokens": jnp.asarray(window[:, :-1]), "labels": jnp.asarray(window[:, 1:]), **extra}
@@ -104,7 +105,7 @@ def main(argv=None):
                 float(metrics["loss"]),
                 float(metrics["ce"]),
                 float(metrics["aux"]),
-                (time.time() - t0) / (step + 1),
+                elapsed() / (step + 1),
             )
         if ckpt and (step + 1) % 50 == 0:
             ckpt.save(step + 1, {"params": params})

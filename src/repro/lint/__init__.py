@@ -1,0 +1,44 @@
+"""repro.lint — project-invariant static analysis.
+
+AST rules that keep the one-shot stack deterministic (rng-discipline,
+wall-clock-ban, salted-hash-ban), honest (wire-cost-honesty), and
+registry-routed (kernel-registry-bypass, jit-hostile-patterns). Run
+``python -m repro.lint`` (defaults to ``src tests``); suppress a
+finding inline with ``# repro: allow[rule] reason=why``. See
+docs/TESTING.md rung 6.
+"""
+from repro.lint.base import (
+    FileContext,
+    LintRule,
+    MalformedSuppression,
+    RULE_REGISTRY,
+    Suppression,
+    Violation,
+    parse_suppressions,
+    rule,
+)
+from repro.lint.runner import (
+    FileReport,
+    LintReport,
+    UnusedSuppression,
+    check_file,
+    iter_python_files,
+    lint_paths,
+)
+
+__all__ = [
+    "FileContext",
+    "LintRule",
+    "MalformedSuppression",
+    "RULE_REGISTRY",
+    "Suppression",
+    "Violation",
+    "parse_suppressions",
+    "rule",
+    "FileReport",
+    "LintReport",
+    "UnusedSuppression",
+    "check_file",
+    "iter_python_files",
+    "lint_paths",
+]

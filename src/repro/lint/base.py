@@ -1,0 +1,247 @@
+"""Rule interface, registry, and suppression syntax for ``repro.lint``.
+
+The linter mirrors the project's other registries (wire codecs in
+``comm.wire``, kernels in ``kernels.ops``, solvers in
+``distill.solvers``): a rule is a named, registered check function, and
+the registry is the single source of truth the runner, the CLI, the
+fixture-corpus tests, and the docs table all walk.
+
+A rule sees one parsed file at a time through a ``FileContext`` (path,
+source lines, AST) and yields ``Violation``s. Rules carry a ``blessed``
+tuple of path fragments — files whose posix path contains any fragment
+are exempt from that rule (the modules that legitimately own the
+pattern: ``repro/obs/`` for wall-clock reads, ``repro/kernels/`` for
+raw kernel calls, ...). Blessing is per-rule, never per-file.
+
+Suppressions are inline and must carry a reason::
+
+    t0 = time.time()  # repro: allow[wall-clock-ban] reason=operator-facing stopwatch
+
+A comment on its own line applies to the NEXT line; a trailing comment
+applies to its own line. ``allow[a,b]`` lists several rules. A
+suppression with no ``reason=`` (or an empty one) is malformed and
+fails the run; a suppression that suppresses nothing is reported as
+unused and fails the run too — stale escapes rot into policy, so they
+are treated as violations of the suppression contract itself.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: ``path:line:col: [rule] message``."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Suppression:
+    """One parsed ``# repro: allow[...] reason=...`` comment."""
+
+    target_line: int          # the line whose violations it suppresses
+    comment_line: int         # where the comment itself sits
+    rules: Tuple[str, ...]
+    reason: str
+    used: bool = False
+
+
+@dataclasses.dataclass
+class MalformedSuppression:
+    path: str
+    line: int
+    error: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [suppression-syntax] {self.error}"
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+# a comment token of the exact shape (anchored at the start of the
+# comment, so prose that merely QUOTES the syntax does not match):
+#   "repro: allow[rule-a,rule-b] reason=free text to end of line"
+_SUPPRESS_RE = re.compile(
+    r"^#\s*repro:\s*allow\[(?P<rules>[^\]]*)\]\s*(?:reason=(?P<reason>.*))?$"
+)
+# any comment that LEADS with "repro:", to catch typos such as
+# "repro:allow wall-clock-ban" that would otherwise silently no-op
+_SUPPRESS_HINT_RE = re.compile(r"^#\s*repro\s*:")
+
+
+class FileContext:
+    """Everything a rule may look at for one file."""
+
+    def __init__(self, path: str, rel: str, source: str, tree: ast.AST):
+        self.path = path
+        self.rel = rel              # normalized posix path used for blessing
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+
+    def walk(self) -> Iterator[ast.AST]:
+        return ast.walk(self.tree)
+
+    def calls(self) -> Iterator[ast.Call]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                yield node
+
+    def violation(self, node: ast.AST, rule: str, message: str) -> Violation:
+        return Violation(
+            rule=rule, path=self.path,
+            line=getattr(node, "lineno", 0), col=getattr(node, "col_offset", 0),
+            message=message,
+        )
+
+
+CheckFn = Callable[[FileContext], Iterable[Violation]]
+
+
+@dataclasses.dataclass(frozen=True)
+class LintRule:
+    """One registered project invariant.
+
+    ``blessed`` path fragments exempt the modules that legitimately own
+    the banned pattern; everywhere else the pattern needs an inline
+    ``# repro: allow[...] reason=...`` to survive.
+    """
+
+    name: str
+    summary: str
+    check: CheckFn
+    blessed: Tuple[str, ...] = ()
+
+    def blesses(self, rel: str) -> bool:
+        return any(fragment in rel for fragment in self.blessed)
+
+
+RULE_REGISTRY: Dict[str, LintRule] = {}
+
+_NAME_RE = re.compile(r"^[a-z][a-z0-9-]*$")
+
+
+def rule(name: str, summary: str, blessed: Tuple[str, ...] = ()) -> Callable[[CheckFn], CheckFn]:
+    """Register a check function as a named rule (decorator), mirroring
+    ``comm.wire.register_codec`` / ``distill.solvers.register_solver``."""
+    if not _NAME_RE.match(name):
+        raise ValueError(f"rule name {name!r} must be kebab-case")
+
+    def deco(fn: CheckFn) -> CheckFn:
+        if name in RULE_REGISTRY:
+            raise ValueError(f"duplicate lint rule {name!r}")
+        RULE_REGISTRY[name] = LintRule(
+            name=name, summary=summary, check=fn, blessed=tuple(blessed)
+        )
+        return fn
+
+    return deco
+
+
+def parse_suppressions(
+    path: str, source: str, known_rules: Iterable[str]
+) -> Tuple[List[Suppression], List[MalformedSuppression]]:
+    """Scan the file's COMMENT tokens for suppressions.
+
+    Tokenizing (rather than grepping lines) means suppression examples
+    inside docstrings and string literals are inert — only a real
+    comment can allow anything. Returns (suppressions, malformed).
+    Unknown rule names and missing reasons are malformed — a typo must
+    fail loudly, not silently allow nothing (or everything).
+    """
+    known = set(known_rules)
+    sups: List[Suppression] = []
+    bad: List[MalformedSuppression] = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return [], []  # the runner reports the parse failure separately
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT or not _SUPPRESS_HINT_RE.match(tok.string):
+            continue
+        i = tok.start[0]
+        m = _SUPPRESS_RE.match(tok.string)
+        if not m:
+            bad.append(MalformedSuppression(
+                path, i,
+                "unparseable suppression; write "
+                "`# repro: allow[rule-name] reason=why`",
+            ))
+            continue
+        names = tuple(r.strip() for r in m.group("rules").split(",") if r.strip())
+        reason = (m.group("reason") or "").strip()
+        if not names:
+            bad.append(MalformedSuppression(path, i, "allow[] lists no rules"))
+            continue
+        unknown = [r for r in names if r not in known]
+        if unknown:
+            bad.append(MalformedSuppression(
+                path, i, f"unknown rule(s) {unknown} in suppression"))
+            continue
+        if not reason:
+            bad.append(MalformedSuppression(
+                path, i,
+                "suppression carries no reason= — every escape hatch "
+                "must say why",
+            ))
+            continue
+        before = tok.line[: tok.start[1]].strip()
+        target = i if before else i + 1
+        sups.append(Suppression(
+            target_line=target, comment_line=i, rules=names, reason=reason
+        ))
+    return sups, bad
+
+
+# ----------------------------------------------------------------------
+# shared AST helpers for rules
+# ----------------------------------------------------------------------
+
+def dotted_name(node: Optional[ast.AST]) -> Optional[str]:
+    """``np.random.default_rng`` for the matching Attribute/Name chain,
+    None for anything dynamic (subscripts, calls, ...)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_leaf(node: ast.Call) -> Optional[str]:
+    """The rightmost name of a call target: ``default_rng`` for both
+    ``default_rng(...)`` and ``np.random.default_rng(...)``."""
+    if isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    if isinstance(node.func, ast.Name):
+        return node.func.id
+    return None
+
+
+def from_imports(tree: ast.AST, module: str) -> Dict[str, str]:
+    """Local alias -> original name for ``from <module> import ...``."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == module:
+            for alias in node.names:
+                out[alias.asname or alias.name] = alias.name
+    return out

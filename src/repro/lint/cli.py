@@ -1,0 +1,93 @@
+"""``python -m repro.lint`` — the project-invariant gate.
+
+Exit codes: 0 clean, 1 findings (violations, unused or malformed
+suppressions), 2 usage error. ``--format json`` emits the
+``repro.lint/v1`` report CI archives as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.lint.base import RULE_REGISTRY
+from repro.lint.runner import lint_paths
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="repro project-invariant static analysis",
+    )
+    p.add_argument(
+        "paths", nargs="*", default=["src", "tests"],
+        help="files or directories to lint (default: src tests)",
+    )
+    p.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="report format (default: text)",
+    )
+    p.add_argument(
+        "--out", default=None, metavar="PATH",
+        help="also write the report to PATH (same format as stdout)",
+    )
+    p.add_argument(
+        "--rules", default=None, metavar="A,B",
+        help="comma-separated subset of rules to run (default: all)",
+    )
+    p.add_argument(
+        "--list-rules", action="store_true",
+        help="print the registered rules and exit",
+    )
+    return p
+
+
+def _render_text(report) -> str:
+    lines: List[str] = []
+    for v in report.violations:
+        lines.append(v.render())
+    for u in report.unused_suppressions:
+        lines.append(u.render())
+    for m in report.malformed_suppressions:
+        lines.append(m.render())
+    s = report.to_dict()["summary"]
+    lines.append(
+        f"repro.lint: {len(report.files)} files, "
+        f"{len(report.rules)} rules -- "
+        f"{s['violations']} violations, {s['suppressed']} suppressed, "
+        f"{s['unused_suppressions']} unused suppressions, "
+        f"{s['malformed_suppressions']} malformed"
+    )
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for r in RULE_REGISTRY.values():
+            blessed = f"  (blessed: {', '.join(r.blessed)})" if r.blessed else ""
+            print(f"{r.name:24s} {r.summary}{blessed}")
+        return 0
+
+    rules = None
+    if args.rules is not None:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+
+    try:
+        report = lint_paths(args.paths, rules=rules)
+    except (FileNotFoundError, KeyError) as e:
+        print(f"repro.lint: {e}", file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        rendered = json.dumps(report.to_dict(), indent=2, sort_keys=True)
+    else:
+        rendered = _render_text(report)
+    print(rendered)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            f.write(rendered)
+            f.write("\n")
+    return 0 if report.clean else 1

@@ -1,0 +1,222 @@
+"""Walk files, run every registered rule, apply suppressions.
+
+The runner is deliberately dumb: discovery (skip caches, hidden dirs,
+and ``fixtures/`` corpora), per-file rule execution, and the
+suppression ledger. All judgement lives in the rules themselves
+(``rules.py``) and in the blessing/suppression policy (``base.py``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import repro.lint.rules  # noqa: F401  (importing registers the rules)
+from repro.lint.base import (
+    FileContext,
+    MalformedSuppression,
+    RULE_REGISTRY,
+    Suppression,
+    Violation,
+    parse_suppressions,
+)
+
+SCHEMA = "repro.lint/v1"
+
+# directory names never descended into during discovery. ``fixtures``
+# holds the known-bad lint corpus under tests/fixtures/lint/ — those
+# files MUST trip rules when linted explicitly (the test suite passes
+# them as file args, which always lints them) but must not fail the
+# repo-wide sweep.
+_SKIP_DIRS = {"__pycache__", "fixtures", ".git", ".venv", "node_modules"}
+
+
+@dataclasses.dataclass
+class UnusedSuppression:
+    path: str
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+
+    def render(self) -> str:
+        names = ",".join(self.rules)
+        return (
+            f"{self.path}:{self.line}: [unused-suppression] "
+            f"allow[{names}] suppresses nothing (reason={self.reason}); "
+            "remove it"
+        )
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class FileReport:
+    path: str
+    violations: List[Violation]
+    unused_suppressions: List[UnusedSuppression]
+    malformed_suppressions: List[MalformedSuppression]
+    suppressed: int = 0
+
+    @property
+    def clean(self) -> bool:
+        return not (
+            self.violations
+            or self.unused_suppressions
+            or self.malformed_suppressions
+        )
+
+
+@dataclasses.dataclass
+class LintReport:
+    files: List[FileReport]
+    rules: Tuple[str, ...]
+
+    @property
+    def violations(self) -> List[Violation]:
+        return [v for f in self.files for v in f.violations]
+
+    @property
+    def unused_suppressions(self) -> List[UnusedSuppression]:
+        return [u for f in self.files for u in f.unused_suppressions]
+
+    @property
+    def malformed_suppressions(self) -> List[MalformedSuppression]:
+        return [m for f in self.files for m in f.malformed_suppressions]
+
+    @property
+    def suppressed(self) -> int:
+        return sum(f.suppressed for f in self.files)
+
+    @property
+    def clean(self) -> bool:
+        return all(f.clean for f in self.files)
+
+    def to_dict(self) -> Dict:
+        return {
+            "schema": SCHEMA,
+            "rules": list(self.rules),
+            "files_checked": len(self.files),
+            "violations": [v.to_dict() for v in self.violations],
+            "unused_suppressions": [
+                u.to_dict() for u in self.unused_suppressions
+            ],
+            "malformed_suppressions": [
+                m.to_dict() for m in self.malformed_suppressions
+            ],
+            "summary": {
+                "violations": len(self.violations),
+                "suppressed": self.suppressed,
+                "unused_suppressions": len(self.unused_suppressions),
+                "malformed_suppressions": len(self.malformed_suppressions),
+            },
+            "clean": self.clean,
+        }
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[str]:
+    """Expand path args: files are yielded as-is (even inside skipped
+    dirs — explicit always wins), directories are walked."""
+    for path in paths:
+        if os.path.isfile(path):
+            yield path
+        elif os.path.isdir(path):
+            for dirpath, dirnames, filenames in os.walk(path):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in _SKIP_DIRS and not d.startswith(".")
+                )
+                for name in sorted(filenames):
+                    if name.endswith(".py"):
+                        yield os.path.join(dirpath, name)
+        else:
+            raise FileNotFoundError(f"lint path does not exist: {path}")
+
+
+def _apply_suppressions(
+    violations: List[Violation], sups: List[Suppression]
+) -> Tuple[List[Violation], int]:
+    """Drop violations covered by a suppression on their line, marking
+    the suppressions used. Returns (surviving, suppressed_count)."""
+    surviving: List[Violation] = []
+    suppressed = 0
+    for v in violations:
+        hit = False
+        for s in sups:
+            if s.target_line == v.line and v.rule in s.rules:
+                s.used = True
+                hit = True
+        if hit:
+            suppressed += 1
+        else:
+            surviving.append(v)
+    return surviving, suppressed
+
+
+def check_file(
+    path: str, rules: Optional[Iterable[str]] = None
+) -> FileReport:
+    """Lint one file with the selected rules (default: all registered)."""
+    selected = _select(rules)
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    rel = os.path.normpath(path).replace(os.sep, "/")
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return FileReport(
+            path=path,
+            violations=[Violation(
+                rule="syntax", path=path, line=e.lineno or 0,
+                col=e.offset or 0, message=f"file does not parse: {e.msg}",
+            )],
+            unused_suppressions=[], malformed_suppressions=[],
+        )
+    ctx = FileContext(path=path, rel=rel, source=source, tree=tree)
+    sups, malformed = parse_suppressions(
+        path, source, RULE_REGISTRY.keys()
+    )
+    raw: List[Violation] = []
+    for r in selected:
+        if r.blesses(rel):
+            continue
+        raw.extend(r.check(ctx))
+    raw.sort(key=lambda v: (v.line, v.col, v.rule))
+    surviving, suppressed = _apply_suppressions(raw, sups)
+    unused = [
+        UnusedSuppression(
+            path=path, line=s.comment_line, rules=s.rules, reason=s.reason
+        )
+        for s in sups if not s.used
+    ]
+    return FileReport(
+        path=path, violations=surviving, unused_suppressions=unused,
+        malformed_suppressions=malformed, suppressed=suppressed,
+    )
+
+
+def lint_paths(
+    paths: Sequence[str], rules: Optional[Iterable[str]] = None
+) -> LintReport:
+    """Lint every python file under ``paths`` with the selected rules."""
+    selected = _select(rules)
+    reports = [
+        check_file(p, rules=[r.name for r in selected])
+        for p in iter_python_files(paths)
+    ]
+    return LintReport(files=reports, rules=tuple(r.name for r in selected))
+
+
+def _select(rules: Optional[Iterable[str]]):
+    if rules is None:
+        return list(RULE_REGISTRY.values())
+    out = []
+    for name in rules:
+        if name not in RULE_REGISTRY:
+            raise KeyError(
+                f"unknown lint rule {name!r}; registered: "
+                f"{sorted(RULE_REGISTRY)}"
+            )
+        out.append(RULE_REGISTRY[name])
+    return out

@@ -21,6 +21,7 @@ from repro.obs.trace import (
     Tracer,
     current_tracer,
     sim_clock,
+    stopwatch,
     traced,
     use_tracer,
     wall_clock,
@@ -41,6 +42,7 @@ __all__ = [
     "Tracer",
     "current_tracer",
     "sim_clock",
+    "stopwatch",
     "traced",
     "use_tracer",
     "wall_clock",

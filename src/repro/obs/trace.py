@@ -66,6 +66,23 @@ def wall_clock() -> Callable[[], float]:
     return lambda: (time.perf_counter() - t0) * 1e6
 
 
+def stopwatch() -> Callable[[], float]:
+    """Elapsed wall-clock SECONDS since creation.
+
+    The blessed duration primitive for engine and launch code: all
+    wall-clock reads live inside ``repro.obs`` (``repro.lint``'s
+    ``wall-clock-ban`` rule enforces it), so determinism-sensitive
+    paths — the fleet, anything traced against ``sim_clock`` — can be
+    audited for clock reads by module, not by call site.
+
+        elapsed = stopwatch()
+        ...work...
+        seconds = elapsed()
+    """
+    t0 = time.perf_counter()
+    return lambda: time.perf_counter() - t0
+
+
 def sim_clock(clock) -> Callable[[], float]:
     """Microseconds of *simulated* time read off a ``fleet.SimClock``
     (or anything with ``now_ms``) — no wall-clock reads, so traces

@@ -74,7 +74,6 @@ after a streamed selection pass.
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Callable, Dict, Iterator, List, Optional
 
@@ -94,7 +93,7 @@ from repro.core.selection import DeviceReport
 from repro.data.federated import DeviceData, FederatedDataset
 from repro.data.partition import derive_device_seed, split_train_test_val
 from repro.obs.registry import default_registry
-from repro.obs.trace import current_tracer
+from repro.obs.trace import current_tracer, stopwatch
 from repro.utils.metrics import roc_auc
 from repro.utils.logging import get_logger
 
@@ -399,14 +398,14 @@ def _train_buckets(by_bucket, lam, epochs, group_cap, shard):
         members = by_bucket[bucket]
         cap = _bucket_group_caps(bucket, group_cap, shard)
         for lo in range(0, len(members), cap):
-            t0 = time.time()
+            elapsed = stopwatch()
             with tracer.span("engine.group", cat="engine", bucket=bucket,
                              members=len(members[lo : lo + cap]), cap=cap):
                 outs = _train_bucket_group(
                     members[lo : lo + cap], bucket, lam, epochs,
                     pad_floor=min(8, cap), shard=shard,
                 )
-            secs = time.time() - t0
+            secs = elapsed()
             reg.counter("engine.groups").inc()
             reg.counter("engine.devices_trained").inc(len(outs))
             reg.histogram("engine.group_seconds").observe(secs)
@@ -488,17 +487,17 @@ def iter_population(
     if mode == "loop":
         chunk = 32
         for lo in range(0, total, chunk):
-            t0 = time.time()
+            elapsed = stopwatch()
             outs = [
                 train_device(i, dataset.devices[i], min_samples, lam, seed, epochs)
                 for i in ids[lo : lo + chunk]
             ]
             done += len(outs)
-            yield GroupUpdate(0, outs, time.time() - t0, done, total)
+            yield GroupUpdate(0, outs, elapsed(), done, total)
         return
 
     # --- bucketed mode ---
-    t0 = time.time()
+    elapsed = stopwatch()
     fallback: List[DeviceOutcome] = []
     by_bucket: Dict[int, List[tuple]] = {}
     for i in ids:
@@ -510,7 +509,7 @@ def iter_population(
             by_bucket.setdefault(bucket, []).append((i, payload))
     if fallback:
         done += len(fallback)
-        yield GroupUpdate(0, fallback, time.time() - t0, done, total)
+        yield GroupUpdate(0, fallback, elapsed(), done, total)
 
     for bucket, outs, secs in _train_buckets(by_bucket, lam, epochs,
                                              group_cap, shard):
@@ -553,7 +552,7 @@ def _iter_streamed(
     for lo in range(0, stream.n_devices, chunk_devices):
         hi = min(lo + chunk_devices, stream.n_devices)
         with tracer.span("engine.chunk", cat="engine", lo=lo, hi=hi):
-            t0 = time.time()
+            elapsed = stopwatch()
             fallback: List[DeviceOutcome] = []
             by_bucket: Dict[int, List[tuple]] = {}
             for i in range(lo, hi):
@@ -567,7 +566,7 @@ def _iter_streamed(
                     by_bucket.setdefault(bucket, []).append((i, payload))
             if fallback:
                 done += len(fallback)
-                yield GroupUpdate(0, fallback, time.time() - t0, done, total)
+                yield GroupUpdate(0, fallback, elapsed(), done, total)
             for bucket, outs, secs in _train_buckets(by_bucket, lam, epochs,
                                                      group_cap, shard):
                 done += len(outs)
@@ -619,7 +618,7 @@ def train_population(
 ) -> PopulationResult:
     """Drain `iter_population` into a result sorted by device id,
     invoking ``on_update(GroupUpdate)`` after each streamed group."""
-    t0 = time.time()
+    elapsed = stopwatch()
     groups = []
     for update in iter_population(dataset, **kw):
         groups.append(update)
@@ -628,8 +627,9 @@ def train_population(
     outcomes = sorted(
         (o for g in groups for o in g.outcomes), key=lambda o: o.device_id
     )
+    seconds = elapsed()
     log.info(
         "trained %d devices in %d groups (%.2fs, mode=%s)",
-        len(outcomes), len(groups), time.time() - t0, kw.get("mode", "bucketed"),
+        len(outcomes), len(groups), seconds, kw.get("mode", "bucketed"),
     )
-    return PopulationResult(outcomes, time.time() - t0, groups)
+    return PopulationResult(outcomes, seconds, groups)

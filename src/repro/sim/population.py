@@ -19,7 +19,6 @@ onto the ledger, and reported under ``ensemble_auc["distilled"]``.
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Callable, Dict, Mapping, Optional, Sequence, Union
 
@@ -27,7 +26,7 @@ import numpy as np
 
 from repro.comm import CommLedger, ModelExchange, StreamExchange
 from repro.core.ensemble import Ensemble
-from repro.obs.trace import current_tracer
+from repro.obs.trace import current_tracer, stopwatch
 from repro.core.selection import ReportColumns
 from repro.distill import DistillConfig, distill_round
 from repro.sim.engine import (
@@ -40,6 +39,7 @@ from repro.sim.engine import (
 )
 from repro.sim.scenarios import DeviceStream, Federation, device_stream, make_federation
 from repro.utils.metrics import streaming_grouped_auc
+from repro.utils.seeds import stream_rng
 from repro.utils.logging import get_logger
 
 log = get_logger("sim.population")
@@ -172,7 +172,7 @@ def run_population(
     ex.record_metadata(ledger)
 
     # seeded, capped subsample of devices for ensemble evaluation
-    rng = np.random.default_rng(cfg.seed + 101)
+    rng = stream_rng(cfg.seed, "eval-subsample")
     eval_ids = [o.device_id for o in outcomes]
     if len(eval_ids) > cfg.eval_device_cap:
         eval_ids = sorted(rng.choice(eval_ids, cfg.eval_device_cap, replace=False))
@@ -306,7 +306,7 @@ def _run_streamed(
     local_auc_l: list = []
 
     tracer = current_tracer()
-    t0 = time.time()
+    elapsed = stopwatch()
     with tracer.span("round.train", cat="round", engine="streamed",
                      devices=stream.n_devices,
                      chunk_devices=cfg.chunk_devices):
@@ -324,7 +324,7 @@ def _run_streamed(
                 local_auc_l.append(o.local_test_auc)
             if on_update is not None:
                 on_update(update)
-    train_s = time.time() - t0
+    train_s = elapsed()
 
     # outcomes arrive fallback-first within each chunk; id order (the
     # materialized round's canonical order) is restored here so every
@@ -356,7 +356,7 @@ def _run_streamed(
 
     # seeded, capped eval subsample — the same draw as the materialized
     # round; only these <= eval_device_cap devices' splits are rebuilt
-    rng = np.random.default_rng(cfg.seed + 101)
+    rng = stream_rng(cfg.seed, "eval-subsample")
     eval_ids = [int(i) for i in cols.ids]
     if len(eval_ids) > cfg.eval_device_cap:
         eval_ids = sorted(rng.choice(eval_ids, cfg.eval_device_cap, replace=False))

@@ -47,7 +47,7 @@ import numpy as np
 
 from repro.comm.channel import ChannelModel, ChannelStream, make_channel_stream
 from repro.data.federated import DeviceData, FederatedDataset
-from repro.data.partition import derive_device_seed
+from repro.utils.seeds import derive_device_seed, stream_rng
 
 
 @dataclasses.dataclass(frozen=True)
@@ -416,7 +416,7 @@ def availability(spec: ScenarioSpec) -> DeviceStream:
     # an all-dropped draw walks the whole population — and then one
     # forced device, chosen without reference to the draws, joins.
     if not any(participates(i) for i in range(spec.n_devices)):
-        forced = int(np.random.default_rng(spec.seed + 3)
+        forced = int(stream_rng(spec.seed, "forced-device")
                      .integers(spec.n_devices))
         available_fn = lambda i: i == forced or participates(i)  # noqa: E731
     else:

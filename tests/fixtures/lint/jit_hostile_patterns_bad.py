@@ -1,0 +1,18 @@
+"""Known-bad corpus for jit-hostile-patterns: host ops in traced fns."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def casts_traced(x):
+    return float(x) + int(x.sum())
+
+
+@jax.vmap
+def pulls_to_host(x):
+    return x.item()
+
+
+@jax.jit
+def materializes(x):
+    return np.asarray(x)

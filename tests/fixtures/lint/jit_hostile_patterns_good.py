@@ -1,0 +1,19 @@
+"""Known-good corpus for jit-hostile-patterns: device-side math, static casts."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def device_math(x):
+    return jnp.sum(x) / x.shape[0]
+
+
+@partial(jax.jit, static_argnames=("epochs",))
+def static_cast(x, epochs):
+    return x * float(epochs)  # epochs is a Python value at trace time
+
+
+def untraced(x):
+    return float(x)  # no jit decorator: host ops are fine

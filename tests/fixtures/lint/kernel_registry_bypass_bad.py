@@ -1,0 +1,16 @@
+"""Known-bad corpus for kernel-registry-bypass: direct impl/oracle calls."""
+from repro.kernels import ref
+from repro.kernels.rbf_gram import rbf_gram_pallas
+from repro.kernels.ref import rbf_gram_ref
+
+
+def direct_pallas(x, y, gamma):
+    return rbf_gram_pallas(x, y, gamma)
+
+
+def direct_oracle(x, y, gamma):
+    return ref.rbf_gram_ref(x, y, gamma)
+
+
+def aliased_oracle(x, y, gamma):
+    return rbf_gram_ref(x, y, gamma)

@@ -1,0 +1,10 @@
+"""Known-good corpus for kernel-registry-bypass: registry-routed dispatch."""
+from repro.kernels import ops
+
+
+def routed(x, y, gamma):
+    return ops.rbf_gram(x, y, gamma)
+
+
+def listed():
+    return sorted(ops.KERNEL_REGISTRY)

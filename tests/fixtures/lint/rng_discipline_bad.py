@@ -1,0 +1,17 @@
+"""Known-bad corpus for rng-discipline: every pattern below must fire."""
+import random
+
+import numpy as np
+
+
+def arithmetic_seed(seed: int, t: int):
+    return np.random.default_rng(seed * 100003 + t)  # collides across (seed, t)
+
+
+def global_seeding(seed: int):
+    np.random.seed(seed)
+    random.seed(seed)
+
+
+def legacy_state(seed: int):
+    return np.random.RandomState(seed)

@@ -1,0 +1,20 @@
+"""Known-good corpus for rng-discipline: derived streams, no arithmetic."""
+import numpy as np
+
+from repro.utils.seeds import derive_device_seed, stream_rng
+
+
+def derived(seed: int, t: int):
+    return np.random.default_rng(derive_device_seed(seed, t))
+
+
+def purpose_stream(seed: int):
+    return stream_rng(seed, "eval-subsample")
+
+
+def plain_constant():
+    return np.random.default_rng(42)
+
+
+def explicit_sequence(seed: int, t: int):
+    return np.random.default_rng(np.random.SeedSequence([seed, t]))

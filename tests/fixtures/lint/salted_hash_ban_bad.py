@@ -1,0 +1,5 @@
+"""Known-bad corpus for salted-hash-ban: builtin hash() for routing."""
+
+
+def shard_for(key: str, n_shards: int) -> int:
+    return hash(key) % n_shards  # resalts every process (PYTHONHASHSEED)

@@ -1,0 +1,14 @@
+"""Known-good corpus for salted-hash-ban: crc32 routing, normal __hash__."""
+import zlib
+
+
+def shard_for(key: str, n_shards: int) -> int:
+    return zlib.crc32(key.encode("utf-8")) % n_shards
+
+
+class Key:
+    def __init__(self, name: str):
+        self.name = name
+
+    def __hash__(self):  # defining __hash__ is fine; calling hash() is not
+        return 0

@@ -1,0 +1,19 @@
+"""Known-bad corpus for wall-clock-ban: direct clock reads."""
+import time
+from datetime import datetime
+from time import perf_counter
+
+
+def measure():
+    t0 = time.time()
+    t1 = time.perf_counter()
+    t2 = time.monotonic_ns()
+    return t1 - t0 + t2
+
+
+def aliased():
+    return perf_counter()
+
+
+def stamped():
+    return datetime.now()

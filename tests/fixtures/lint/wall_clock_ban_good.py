@@ -1,0 +1,17 @@
+"""Known-good corpus for wall-clock-ban: durations via obs primitives."""
+from repro.obs import stopwatch, timed_call
+
+
+def measure(work):
+    elapsed = stopwatch()
+    work()
+    return elapsed()
+
+
+def measured_call(fn, x):
+    return timed_call(fn, x)
+
+
+def sleepy():
+    import time
+    time.sleep(0.0)  # sleeping is not reading the clock

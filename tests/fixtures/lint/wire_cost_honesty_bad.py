@@ -1,0 +1,15 @@
+"""Known-bad corpus for wire-cost-honesty: in-memory / pickle sizing."""
+import pickle
+import sys
+
+
+def memory_priced(update):
+    return update.support_x.nbytes + update.coef.nbytes
+
+
+def pickle_priced(update):
+    return len(pickle.dumps(update))
+
+
+def interpreter_priced(update):
+    return sys.getsizeof(update)

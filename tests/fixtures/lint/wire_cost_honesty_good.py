@@ -1,0 +1,10 @@
+"""Known-good corpus for wire-cost-honesty: exact encoded sizes."""
+from repro.comm.wire import encode, svm_wire_nbytes
+
+
+def encoded_price(model, codec):
+    return len(encode(model, codec))
+
+
+def shape_price(n, d, codec):
+    return svm_wire_nbytes(n, d, codec)

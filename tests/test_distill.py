@@ -21,6 +21,7 @@ from repro.distill import (
     make_proxy,
 )
 from repro.utils.metrics import roc_auc
+from repro.utils.seeds import derive_device_seed, derive_stream_seed
 
 
 def _blobs(rng, n, d=6, sep=1.8):
@@ -107,7 +108,7 @@ def test_cg_dense_equivalence_property(seed, l, gamma):
     """CG at tight tolerance solves the same system as the dense LU."""
     r = np.random.default_rng(seed)
     proxy = _blobs(r, l)[0]
-    teacher = train_svm(*_blobs(np.random.default_rng(seed + 1), 60), lam=0.02)
+    teacher = train_svm(*_blobs(np.random.default_rng(derive_stream_seed(seed, "teacher-blobs")), 60), lam=0.02)
     dense = distill_teacher(teacher.predict, proxy, gamma, DistillConfig(solver="dense"))
     cg = distill_teacher(teacher.predict, proxy, gamma,
                          DistillConfig(solver="cg", tol=1e-8, maxiter=4000))
@@ -192,7 +193,7 @@ def test_distill_rng_independent_streams():
 def test_distill_sweep_matches_single_solves(teacher, rng):
     """Every (trial, l) cell of the batched sweep equals the one-at-a-
     time dense solve on that prefix (same gamma, same ridge)."""
-    proxies = np.stack([_blobs(np.random.default_rng(40 + t), 60)[0] for t in range(2)])
+    proxies = np.stack([_blobs(np.random.default_rng(derive_device_seed(40, t)), 60)[0] for t in range(2)])
     ls = (10, 35, 60)
     students = distill_sweep(teacher.predict, proxies, ls)
     xq = _blobs(rng, 128)[0]

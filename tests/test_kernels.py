@@ -19,6 +19,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.ops import KERNEL_REGISTRY
+from repro.utils.seeds import derive_device_seed
 
 
 def _discovered_pallas_kernels():
@@ -168,7 +169,7 @@ def test_rbf_gram_properties(key):
 @pytest.mark.parametrize("gamma", [0.1, 1.0])
 def test_rbf_gram_q8_sweep(key, m, n, d, gamma):
     """int8 on-the-fly-dequant Gram kernel vs its oracle, ragged shapes."""
-    rng = np.random.default_rng(m * 1000 + n)
+    rng = np.random.default_rng(derive_device_seed(m, n))
     x = jax.random.normal(key, (m, d))
     q = jnp.asarray(rng.integers(-127, 128, size=(n, d)), jnp.int8)
     scale = jnp.asarray(rng.uniform(0.005, 0.1, size=d), jnp.float32)
@@ -250,7 +251,7 @@ def test_ensemble_score_sweep(key, b, k, n_max, d):
 )
 def test_ensemble_score_q8_sweep(key, b, k, n_max, d):
     """Fused int8 serve kernel vs oracle, ragged zero-padded supports."""
-    rng = np.random.default_rng(b * 100 + k)
+    rng = np.random.default_rng(derive_device_seed(b, k))
     x = jax.random.normal(key, (b, d))
     q = jnp.asarray(rng.integers(-127, 128, size=(k, n_max, d)), jnp.int8)
     scale = jnp.asarray(rng.uniform(0.005, 0.05, size=(k, d)), jnp.float32)

@@ -1,0 +1,287 @@
+"""repro.lint — rung 6 of the testing ladder (docs/TESTING.md).
+
+Four layers:
+
+  * corpus        every registered rule fires on its known-bad fixture
+                  and stays silent on its known-good one — a rule added
+                  without a corpus pair fails the suite;
+  * suppressions  the ``# repro: allow[rule] reason=...`` contract:
+                  round-trip, own-line targeting, unused and malformed
+                  reporting, docstring inertness;
+  * runner/CLI    discovery (fixtures skipped, explicit files win),
+                  blessing, exit codes, the ``repro.lint/v1`` JSON;
+  * the sweep     ``src`` and ``tests`` are lint-clean — the same gate
+                  CI runs, kept inside the suite so a violating patch
+                  fails tier-1 locally before it ever reaches CI.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.lint import (
+    RULE_REGISTRY,
+    check_file,
+    iter_python_files,
+    lint_paths,
+)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+CORPUS = os.path.join(HERE, "fixtures", "lint")
+
+
+def _fixture(rule: str, kind: str) -> str:
+    return os.path.join(CORPUS, f"{rule.replace('-', '_')}_{kind}.py")
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(text))
+    return str(p)
+
+
+# ----------------------------------------------------------------------
+# corpus: every rule fires on bad, is silent on good
+# ----------------------------------------------------------------------
+
+def test_at_least_six_rules_registered():
+    assert len(RULE_REGISTRY) >= 6
+    assert set(RULE_REGISTRY) >= {
+        "rng-discipline", "wall-clock-ban", "kernel-registry-bypass",
+        "wire-cost-honesty", "salted-hash-ban", "jit-hostile-patterns",
+    }
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_REGISTRY))
+def test_rule_has_corpus_pair(rule):
+    assert os.path.exists(_fixture(rule, "bad")), (
+        f"rule {rule} has no known-bad fixture — every rule ships a corpus pair"
+    )
+    assert os.path.exists(_fixture(rule, "good"))
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_REGISTRY))
+def test_rule_fires_on_known_bad(rule):
+    report = check_file(_fixture(rule, "bad"), rules=[rule])
+    assert report.violations, f"{rule} is silent on its known-bad corpus"
+    assert all(v.rule == rule for v in report.violations)
+    assert all(v.line > 0 for v in report.violations)
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_REGISTRY))
+def test_rule_good_fixture_clean_under_all_rules(rule):
+    report = check_file(_fixture(rule, "good"))
+    assert report.clean, [v.render() for v in report.violations]
+
+
+def test_rule_names_are_kebab_case_and_summarized():
+    for name, r in RULE_REGISTRY.items():
+        assert name == r.name
+        assert name == name.lower() and " " not in name
+        assert r.summary
+
+
+# ----------------------------------------------------------------------
+# suppressions
+# ----------------------------------------------------------------------
+
+def test_trailing_suppression_round_trip(tmp_path):
+    path = _write(tmp_path, "mod.py", """
+        def shard(key, n):
+            return hash(key) % n  # repro: allow[salted-hash-ban] reason=demo shard, never persisted
+    """)
+    report = check_file(path)
+    assert report.clean
+    assert report.suppressed == 1
+
+
+def test_own_line_suppression_targets_next_line(tmp_path):
+    path = _write(tmp_path, "mod.py", """
+        def shard(key, n):
+            # repro: allow[salted-hash-ban] reason=demo shard, never persisted
+            return hash(key) % n
+    """)
+    report = check_file(path)
+    assert report.clean
+    assert report.suppressed == 1
+
+
+def test_suppression_lists_multiple_rules(tmp_path):
+    path = _write(tmp_path, "mod.py", """
+        import time
+
+        def f(key):
+            # repro: allow[salted-hash-ban,wall-clock-ban] reason=fixture of both
+            return hash(key) + time.time()
+    """)
+    report = check_file(path)
+    assert report.clean
+    assert report.suppressed == 2
+
+
+def test_unused_suppression_reported(tmp_path):
+    path = _write(tmp_path, "mod.py", """
+        def f(x):
+            return x + 1  # repro: allow[salted-hash-ban] reason=stale escape
+    """)
+    report = check_file(path)
+    assert not report.clean
+    assert len(report.unused_suppressions) == 1
+    assert report.unused_suppressions[0].rules == ("salted-hash-ban",)
+
+
+def test_suppression_without_reason_is_malformed(tmp_path):
+    path = _write(tmp_path, "mod.py", """
+        def f(key):
+            return hash(key)  # repro: allow[salted-hash-ban]
+    """)
+    report = check_file(path)
+    assert not report.clean
+    assert len(report.malformed_suppressions) == 1
+    # and the reasonless comment suppresses nothing: the violation stands
+    assert len(report.violations) == 1
+
+
+def test_unknown_rule_in_suppression_is_malformed(tmp_path):
+    path = _write(tmp_path, "mod.py", """
+        x = 1  # repro: allow[no-such-rule] reason=typo
+    """)
+    report = check_file(path)
+    assert len(report.malformed_suppressions) == 1
+
+
+def test_typod_suppression_syntax_is_malformed(tmp_path):
+    path = _write(tmp_path, "mod.py", """
+        x = 1  # repro:allow salted-hash-ban reason=forgot the brackets
+    """)
+    report = check_file(path)
+    assert len(report.malformed_suppressions) == 1
+
+
+def test_docstring_suppression_mention_is_inert(tmp_path):
+    path = _write(tmp_path, "mod.py", '''
+        """Write `# repro: allow[salted-hash-ban] reason=why` to suppress."""
+
+        def f(key, n):
+            return hash(key) % n
+    ''')
+    report = check_file(path)
+    # the docstring neither suppresses the real violation below it...
+    assert len(report.violations) == 1
+    # ...nor counts as a (mal)formed suppression comment
+    assert not report.malformed_suppressions
+    assert not report.unused_suppressions
+
+
+# ----------------------------------------------------------------------
+# runner: blessing, discovery, selection, parse failures
+# ----------------------------------------------------------------------
+
+def test_blessed_module_exempt_from_its_rule(tmp_path):
+    obs_dir = tmp_path / "repro" / "obs"
+    obs_dir.mkdir(parents=True)
+    path = obs_dir / "clockwork.py"
+    path.write_text("import time\nT0 = time.time()\n")
+    report = check_file(str(path))
+    assert report.clean  # wall-clock-ban blesses repro/obs/
+
+
+def test_blessing_is_per_rule_not_per_file(tmp_path):
+    obs_dir = tmp_path / "repro" / "obs"
+    obs_dir.mkdir(parents=True)
+    path = obs_dir / "clockwork.py"
+    path.write_text("import time\nT0 = time.time()\nS = hash('x')\n")
+    report = check_file(str(path))
+    assert [v.rule for v in report.violations] == ["salted-hash-ban"]
+
+
+def test_walk_skips_fixture_dirs_but_explicit_files_win():
+    walked = list(iter_python_files([HERE]))
+    assert not any("fixtures" in p for p in walked)
+    bad = _fixture("salted-hash-ban", "bad")
+    assert list(iter_python_files([bad])) == [bad]
+
+
+def test_missing_path_raises():
+    with pytest.raises(FileNotFoundError):
+        list(iter_python_files([os.path.join(HERE, "no-such-dir")]))
+
+
+def test_unknown_rule_selection_raises():
+    with pytest.raises(KeyError):
+        lint_paths([CORPUS], rules=["no-such-rule"])
+
+
+def test_syntax_error_reported_not_raised(tmp_path):
+    path = _write(tmp_path, "broken.py", "def f(:\n")
+    report = check_file(path)
+    assert not report.clean
+    assert report.violations[0].rule == "syntax"
+
+
+# ----------------------------------------------------------------------
+# CLI: exit codes and the repro.lint/v1 JSON report
+# ----------------------------------------------------------------------
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    return subprocess.run(
+        [sys.executable, "-m", "repro.lint", *args],
+        capture_output=True, text=True, cwd=REPO, env=env,
+    )
+
+
+def test_cli_json_on_known_bad_fixture():
+    proc = _run_cli("--format", "json", _fixture("rng-discipline", "bad"))
+    assert proc.returncode == 1
+    payload = json.loads(proc.stdout)
+    assert payload["schema"] == "repro.lint/v1"
+    assert payload["clean"] is False
+    assert payload["summary"]["violations"] == len(payload["violations"]) > 0
+    assert {v["rule"] for v in payload["violations"]} == {"rng-discipline"}
+
+
+def test_cli_clean_file_exits_zero_and_writes_out(tmp_path):
+    out = tmp_path / "report.json"
+    proc = _run_cli(
+        "--format", "json", "--out", str(out),
+        _fixture("rng-discipline", "good"),
+    )
+    assert proc.returncode == 0
+    payload = json.loads(out.read_text())
+    assert payload["clean"] is True
+    assert payload["files_checked"] == 1
+
+
+def test_cli_list_rules():
+    proc = _run_cli("--list-rules")
+    assert proc.returncode == 0
+    for name in RULE_REGISTRY:
+        assert name in proc.stdout
+
+
+def test_cli_usage_error_exits_two():
+    proc = _run_cli("--rules", "no-such-rule", CORPUS)
+    assert proc.returncode == 2
+
+
+# ----------------------------------------------------------------------
+# the sweep: the tree this suite tests is itself lint-clean
+# ----------------------------------------------------------------------
+
+def test_src_and_tests_are_lint_clean():
+    report = lint_paths([os.path.join(REPO, "src"), HERE])
+    problems = (
+        [v.render() for v in report.violations]
+        + [u.render() for u in report.unused_suppressions]
+        + [m.render() for m in report.malformed_suppressions]
+    )
+    assert report.clean, "\n".join(problems)
+    assert len(report.rules) >= 6

@@ -3,6 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core import Ensemble, ensemble_predict_mean, train_svm
+from repro.utils.seeds import derive_device_seed
 from repro.serve import (
     EnsembleScorer,
     LRUCache,
@@ -418,7 +419,7 @@ def test_ensemble_scorer_streaming_evaluate_matches_materialized(rng):
 
     members = []
     for i in range(4):
-        x, y = _blob_data(np.random.default_rng(10 + i), n=40)
+        x, y = _blob_data(np.random.default_rng(derive_device_seed(10, i)), n=40)
         members.append(train_svm(x, y, lam=0.02))
     scorer = EnsembleScorer(Ensemble(members))
     local = np.random.default_rng(42)

@@ -47,6 +47,7 @@ from repro.core.selection import (
 )
 from repro.core.svm import SVMModel
 from repro.distill import DistillConfig
+from repro.utils.seeds import derive_device_seed
 from repro.sim import (
     PopulationConfig,
     SCENARIOS,
@@ -251,7 +252,7 @@ def test_availability_mask_pinned_and_lazy():
 @pytest.mark.parametrize("codec", ("fp32", "fp16", "int8", "topk:0.25"))
 @pytest.mark.parametrize("n,d", ((1, 2), (7, 16), (64, 5), (130, 16)))
 def test_svm_wire_nbytes_matches_encode(codec, n, d):
-    rng = np.random.default_rng(n * 31 + d)
+    rng = np.random.default_rng(derive_device_seed(n, d))
     model = SVMModel(
         support_x=rng.normal(size=(n, d)).astype(np.float32),
         coef=rng.normal(size=n).astype(np.float32),

@@ -15,7 +15,7 @@ from repro.data import (
     split_train_test_val,
     token_batches,
 )
-from repro.data.partition import derive_device_seed
+from repro.utils.seeds import derive_device_seed
 from repro.data.federated import DeviceData
 from repro.optim import adamw, apply_updates, chain, clip_by_global_norm, cosine_decay, linear_warmup_cosine, sgd
 from repro.utils import roc_auc, tree_global_norm, tree_size_bytes, tree_stack, tree_unstack
@@ -213,7 +213,7 @@ def test_dirichlet_skew_monotone_in_alpha():
     def skew(alpha):
         vals = []
         for seed in range(3):
-            rng = np.random.default_rng(100 + seed)
+            rng = np.random.default_rng(derive_device_seed(100, seed))
             x = rng.normal(size=(400, 2)).astype(np.float32)
             y = rng.integers(0, 2, 400).astype(np.float32)
             for p in dirichlet_partition(x, y, 10, alpha=alpha, seed=seed):
@@ -257,3 +257,57 @@ def test_token_batches_windows():
     # windows are contiguous slices
     for row in w:
         np.testing.assert_array_equal(np.diff(row), 1)
+
+
+# ----------------------------------------------------------------------
+# seed-stream snapshots (PR 9): the collision-prone arithmetic
+# derivations (seed*100003+t, seed*9973+t, seed*7919+c, seed+17) were
+# replaced with SeedSequence streams via utils.seeds. These pins make
+# any future change to the derivation — intentional or accidental —
+# loud: they are the exact first draws of the NEW streams.
+# ----------------------------------------------------------------------
+
+def test_seed_stream_derivations_pinned():
+    from repro.utils.seeds import derive_stream_seed
+
+    assert derive_device_seed(0, 0) == 2968811710
+    assert derive_device_seed(7, 3) == 3466196061
+    assert derive_stream_seed(0, "eval-subsample") == 4031806082
+    assert derive_stream_seed(7, "cohort-concept") == 3393190573
+    assert derive_stream_seed(7, "forced-device") == 871783616
+    # purpose strings give disjoint streams at the same (seed, index)
+    assert derive_stream_seed(7, "eval-subsample") != derive_stream_seed(
+        7, "forced-device"
+    )
+
+
+def test_gaussian_federated_stream_pinned():
+    d0 = make_dataset("emnist", seed=7).devices[0]
+    np.testing.assert_allclose(
+        d0.x[0, :3],
+        np.array([-2.38213229, 1.36269462, -0.32968810], np.float32),
+        rtol=1e-6,
+    )
+    np.testing.assert_array_equal(d0.y[:6], [1.0, 1.0, -1.0, 1.0, 1.0, 1.0])
+
+
+def test_cohort_stream_pinned():
+    from repro.data.federated import make_cohort_dataset
+
+    c0 = make_cohort_dataset(seed=7, n_cohorts=2, n_devices=4, dim=5,
+                             lo=6, hi=9).devices[0]
+    np.testing.assert_allclose(
+        c0.x[0, :3],
+        np.array([2.42558599, 1.99250579, 0.06176382], np.float32),
+        rtol=1e-6,
+    )
+    np.testing.assert_array_equal(c0.y[:4], [1.0, -1.0, 1.0, -1.0])
+
+
+def test_lm_client_stream_pinned():
+    lm = make_federated_lm_data(n_clients=2, vocab=11, tokens_per_client=16,
+                                seed=7)
+    np.testing.assert_array_equal(
+        lm[0], [10, 6, 5, 8, 5, 5, 2, 0, 5, 2, 3, 0, 1, 9, 9, 3])
+    np.testing.assert_array_equal(
+        lm[1], [4, 5, 8, 4, 2, 4, 2, 5, 1, 8, 3, 5, 2, 0, 6, 3])
