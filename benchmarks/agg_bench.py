@@ -1,0 +1,131 @@
+"""Aggregator-zoo leaderboard: AUC per uploaded byte, per strategy.
+
+For every (scenario x codec x registered aggregator) cell the bench
+runs the one-shot round on the SAME federation and records the best
+ensemble AUC next to the exact ledger bytes the round uploaded —
+models, metadata, AND the aggregator's own ``agg_extra`` lane (Fisher
+diagonals, validation columns, feature moments), so a strategy that
+buys its AUC with side payloads is charged for them. The leaderboard
+ranks cells by AUC per uploaded KiB: the paper's mean ensemble ships
+nothing extra, and any zoo entry must beat it on the frontier, not
+just on raw AUC.
+
+Determinism is part of the contract: every quantity is either an exact
+ledger integer or an AUC rounded to 6 decimals, and the bucketed
+engine is mesh-independent, so the ``--smoke`` JSON is byte-reproducible
+and CI diffs it against the committed ``benchmarks/agg_bench.json`` on
+both tier-1 lanes — an aggregator or pricing change that moves any
+number shows up as a baseline diff, not a silent drift.
+
+Modes: no argv = full sweep (3 scenarios x 3 codecs, 48 devices);
+``--smoke`` (tier-1 CI lanes) shrinks to one scenario x 2 codecs and
+12 devices. ``--out PATH`` overrides the JSON location.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import assert_not_interpret, csv_row
+
+FULL = dict(scenarios=("iid", "dirichlet", "quantity_skew"),
+            codecs=("fp32", "fp16", "int8"),
+            n_devices=48, mean_samples=60, ks=(5,))
+SMOKE = dict(scenarios=("dirichlet",), codecs=("fp16", "int8"),
+             n_devices=12, mean_samples=50, ks=(3,))
+
+
+def _cells(scenarios, codecs, n_devices, mean_samples, ks, seed=3):
+    from repro.agg import AGGREGATOR_REGISTRY
+    from repro.sim import PopulationConfig, make_federation, run_population
+
+    cells = []
+    for scenario in scenarios:
+        fed = make_federation(scenario, n_devices=n_devices, seed=seed,
+                              mean_samples=mean_samples, min_samples=40)
+        for codec in codecs:
+            for name in sorted(AGGREGATOR_REGISTRY):
+                rep = run_population(PopulationConfig(
+                    scenario=scenario, n_devices=n_devices, seed=seed,
+                    mean_samples=mean_samples, min_samples=40,
+                    engine="bucketed", codec=codec, ks=ks,
+                    strategies=("cv",), aggregator=name,
+                ), federation=fed)
+                auc = max(rep.best.values())
+                total_up = int(rep.comm["total_up"])
+                cells.append({
+                    "scenario": scenario,
+                    "codec": codec,
+                    "aggregator": name,
+                    "auc": round(float(auc), 6),
+                    "total_up_bytes": total_up,
+                    "agg_extra_bytes": int(rep.comm["total_agg_extra"]),
+                    "auc_per_kib": round(float(auc) / (total_up / 1024.0), 6),
+                })
+    return cells
+
+
+def _leaderboard(cells):
+    """Per scenario: cells ranked by AUC per uploaded KiB (descending),
+    ties broken by raw AUC then by name for stable ordering."""
+    out = {}
+    for scenario in sorted({c["scenario"] for c in cells}):
+        ranked = sorted(
+            (c for c in cells if c["scenario"] == scenario),
+            key=lambda c: (-c["auc_per_kib"], -c["auc"],
+                           c["aggregator"], c["codec"]),
+        )
+        out[scenario] = [
+            {k: c[k] for k in ("aggregator", "codec", "auc",
+                               "total_up_bytes", "agg_extra_bytes",
+                               "auc_per_kib")}
+            for c in ranked
+        ]
+    return out
+
+
+def run(params=None, json_path=None, seed=3):
+    """Sweep the zoo and write the leaderboard JSON. Called bare by
+    benchmarks/run.py (full sweep); __main__ adds the --smoke preset."""
+    assert_not_interpret()
+    p = dict(FULL if params is None else params)
+    cells = _cells(seed=seed, **p)
+    payload = {
+        "config": {**{k: list(v) if isinstance(v, tuple) else v
+                      for k, v in p.items()}, "seed": seed,
+                   "engine": "bucketed", "strategies": ["cv"]},
+        "cells": cells,
+        "leaderboard": _leaderboard(cells),
+    }
+    if json_path is None:
+        # the SMOKE sweep owns the committed, CI-diffed baseline; the
+        # full sweep writes next to it without clobbering the baseline
+        fname = "agg_bench.json" if p == SMOKE else "agg_bench_full.json"
+        json_path = os.path.join(os.path.dirname(__file__), fname)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    rows = []
+    for scenario, ranked in payload["leaderboard"].items():
+        top = ranked[0]
+        rows.append(csv_row(
+            f"agg.{scenario}.winner", top["aggregator"],
+            f"{top['codec']}; auc={top['auc']}; "
+            f"auc/KiB={top['auc_per_kib']}"))
+        for c in ranked:
+            rows.append(csv_row(
+                f"agg.{scenario}.{c['aggregator']}.{c['codec']}",
+                f"{c['auc']}",
+                f"up={c['total_up_bytes']}B extra={c['agg_extra_bytes']}B "
+                f"auc/KiB={c['auc_per_kib']}"))
+    rows.append(csv_row("agg.json", json_path, "leaderboard artifact"))
+    return rows
+
+
+if __name__ == "__main__":
+    out = None
+    if "--out" in sys.argv:
+        out = sys.argv[sys.argv.index("--out") + 1]
+    params = SMOKE if "--smoke" in sys.argv else None
+    print("\n".join(run(params=params, json_path=out)))

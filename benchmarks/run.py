@@ -20,6 +20,7 @@ def main() -> None:
     assert_not_interpret()
     from benchmarks import (
         ablation_distill_loss,
+        agg_bench,
         comm_bench,
         comm_cost,
         distill_bench,
@@ -42,6 +43,7 @@ def main() -> None:
         ("fig3", fig3_distill_proxy.run),
         ("comm", comm_cost.run),
         ("comm_bench", comm_bench.run),
+        ("agg", agg_bench.run),
         ("distill_bench", distill_bench.run),
         ("kernels", kernel_bench.run),
         ("serve", serve_bench.run),

@@ -12,6 +12,8 @@ Event kinds:
 
     metadata           device -> server scalar DeviceReport (pre-round)
     model_upload       device -> server selected local model (THE round)
+    agg_extra          device -> server aggregator side payload
+                       (Fisher diagonals, val columns, feature moments)
     ensemble_download  server -> consumer full selected ensemble
     student_download   server -> consumer distilled student
 
@@ -36,7 +38,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 from repro.obs.trace import current_tracer
 
 DIRECTIONS = ("up", "down")
-KINDS = ("metadata", "model_upload", "ensemble_download", "student_download")
+KINDS = ("metadata", "model_upload", "agg_extra", "ensemble_download", "student_download")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -212,4 +214,8 @@ class CommLedger:
         # own roll-up so bytes-vs-AUC frontiers can price the compact
         # student against the full ensemble download directly
         out["total_student_down"] = float(self.total(kind="student_download"))
+        # aggregator side payloads (repro.agg) — their own roll-up so
+        # the agg_bench AUC-per-byte frontier can separate what a
+        # strategy costs BEYOND the model uploads it shares with mean
+        out["total_agg_extra"] = float(self.total(kind="agg_extra"))
         return out

@@ -55,12 +55,15 @@ KIND_LINEAR = 2
 KIND_CONST = 3
 KIND_ENSEMBLE = 4
 KIND_REPORT = 5
+KIND_AGG_EXTRA = 6
 
 _SVM_PREFIX = struct.Struct("<IId")     # n, d, gamma
 _LINEAR_PREFIX = struct.Struct("<Id")   # d, bias
 _CONST_BODY = struct.Struct("<d")       # value
 _COUNT = struct.Struct("<I")
 _REPORT_BODY = struct.Struct("<IIfB")   # device_id, n_train, val_auc, eligible
+_U8 = struct.Struct("<B")
+_DIM = struct.Struct("<I")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +208,30 @@ class QuantizedStackedEnsemble:
         return chunked_bucket_predict(self.score, x, chunk)
 
 
+@dataclasses.dataclass
+class AggExtra:
+    """Named-array side payload for aggregator strategies (repro.agg).
+
+    Anything a strategy needs beyond the model itself — Fisher
+    diagonals, per-member validation columns, feature moments — rides
+    device -> server as one of these, encoded through the same codec
+    registry as the models and priced at exactly ``len(encode())`` on
+    the CommLedger under ``kind="agg_extra"``. Array names are ASCII,
+    <= 255 bytes; arrays must have ndim >= 1. int8 quantizes per-column
+    over the LAST axis (a 1-D array is one column); topk has no sparse
+    meaning for dense statistics and falls back to fp32.
+    """
+
+    arrays: Dict[str, np.ndarray]
+
+    def __post_init__(self) -> None:
+        for name, a in self.arrays.items():
+            if not name or len(name.encode("ascii")) > 255:
+                raise ValueError(f"agg-extra array name {name!r} must be 1..255 ASCII bytes")
+            if np.asarray(a).ndim < 1:
+                raise ValueError(f"agg-extra array {name!r} must have ndim >= 1")
+
+
 def _quantize_columns(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Per-column affine int8: q = round((x - zero) / scale) in [-127, 127]."""
     lo = x.min(axis=0)
@@ -242,7 +269,7 @@ class WireReader:
         return vals
 
     def array(self, count: int, dtype: str, shape=None) -> np.ndarray:
-        nbytes = count * np.dtype(dtype).itemsize
+        nbytes = count * np.dtype(dtype).itemsize  # repro: allow[wire-cost-honesty] reason=decode cursor stride over an already-priced blob, not a wire price
         a = np.frombuffer(self.blob, dtype, count=count, offset=self.off).copy()
         self.off += nbytes
         return a if shape is None else a.reshape(shape)
@@ -344,6 +371,53 @@ def _decode_linear(r: WireReader) -> LinearSVM:
     return LinearSVM(w=w, b=b)
 
 
+def _encode_agg_extra(extra: AggExtra, codec: Codec) -> bytes:
+    parts = [_header(KIND_AGG_EXTRA, codec), _U8.pack(len(extra.arrays))]
+    for name, a in extra.arrays.items():
+        a = np.asarray(a, np.float32)
+        nb = name.encode("ascii")
+        parts += [_U8.pack(len(nb)), nb, _U8.pack(a.ndim)]
+        parts += [_DIM.pack(dim) for dim in a.shape]
+        if codec.name == "fp16":
+            parts.append(_arr(a, "<f2"))
+        elif codec.name == "int8":
+            cols = a.shape[-1] if a.ndim > 1 else 1
+            if a.size == 0:  # zero rows OR zero cols: no quantizable body
+                scale = np.ones(cols, np.float32)
+                zero = np.zeros(cols, np.float32)
+                q = np.zeros(0, np.int8)
+            else:
+                x2 = np.ascontiguousarray(a).reshape(-1, cols)
+                q, scale, zero = _quantize_columns(x2)
+            parts += [_arr(scale, "<f4"), _arr(zero, "<f4"), q.tobytes()]
+        else:  # fp32; topk has no sparse meaning for dense statistics
+            parts.append(_arr(a, "<f4"))
+    return b"".join(parts)
+
+
+def _decode_agg_extra(r: WireReader) -> AggExtra:
+    (count,) = r.unpack(_U8)
+    arrays: Dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = r.unpack(_U8)
+        name = r.take(name_len).decode("ascii")
+        (ndim,) = r.unpack(_U8)
+        shape = tuple(r.unpack(_DIM)[0] for _ in range(ndim))
+        size = int(np.prod(shape, dtype=np.int64))
+        if r.codec.name == "fp16":
+            arrays[name] = r.array(size, "<f2", shape).astype(np.float32)
+        elif r.codec.name == "int8":
+            cols = shape[-1] if ndim > 1 else 1
+            scale = r.array(cols, "<f4")
+            zero = r.array(cols, "<f4")
+            q = r.array(size, "i1", (-1, cols) if size else (0, cols))
+            deq = q.astype(np.float32) * scale[None, :] + zero[None, :]
+            arrays[name] = deq.reshape(shape)
+        else:
+            arrays[name] = r.array(size, "<f4", shape)
+    return AggExtra(arrays)
+
+
 def encode(obj, codec="fp32") -> bytes:
     """Encode a protocol payload; ``len(...)`` of the result is the
     exact number of bytes the message costs on the wire."""
@@ -371,6 +445,8 @@ def encode(obj, codec="fp32") -> bytes:
         return _header(KIND_REPORT, codec) + _REPORT_BODY.pack(
             obj.device_id, obj.n_train, float(obj.val_auc), int(obj.eligible)
         )
+    if isinstance(obj, AggExtra):
+        return _encode_agg_extra(obj, codec)
     raise TypeError(f"cannot wire-encode {type(obj).__name__}")
 
 
@@ -395,6 +471,8 @@ def decode(blob: bytes, *, materialize: bool = False):
     if r.kind == KIND_REPORT:
         device_id, n_train, val_auc, eligible = r.unpack(_REPORT_BODY)
         return DeviceReport(device_id, n_train, float(val_auc), bool(eligible))
+    if r.kind == KIND_AGG_EXTRA:
+        return _decode_agg_extra(r)
     raise ValueError(f"unknown wire kind {r.kind}")
 
 
@@ -420,6 +498,27 @@ def svm_wire_nbytes(n: int, d: int, codec="fp32") -> int:
         return base + d * 4 + d * 4 + n * d + n * 4
     m = max(1, int(np.ceil(codec.param * n)))  # topk
     return base + m * d * 4 + m * 4
+
+
+def agg_extra_wire_nbytes(shapes: Dict[str, Tuple[int, ...]], codec="fp32") -> int:
+    """Exact ``len(encode(AggExtra, codec))`` from array SHAPES alone —
+    the ``svm_wire_nbytes`` mirror for aggregator side payloads, so the
+    streamed round can price extras without regenerating device state.
+    Equality with the encoded length is pinned in tests/test_agg.py."""
+    codec = get_codec(codec)
+    total = _HEADER.size + _U8.size
+    for name, shape in shapes.items():
+        shape = tuple(int(s) for s in shape)
+        size = int(np.prod(shape, dtype=np.int64))
+        total += _U8.size + len(name.encode("ascii")) + _U8.size + _DIM.size * len(shape)
+        if codec.name == "fp16":
+            total += size * 2
+        elif codec.name == "int8":
+            cols = shape[-1] if len(shape) > 1 else 1
+            total += cols * 4 + cols * 4 + size
+        else:  # fp32 / topk (dense-statistics fallback)
+            total += size * 4
+    return total
 
 
 # the pre-round metadata exchange costs exactly this much per device

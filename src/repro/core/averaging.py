@@ -23,8 +23,46 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def normalize_weights(weights: Sequence[float], n: Optional[int] = None) -> np.ndarray:
+    """Validate member weights and project them onto the simplex.
+
+    Weights must be finite and non-negative, and their sum must be
+    bounded away from zero: a negative weight silently flips a member's
+    contribution, and a zero/near-zero sum turns the normalizing divide
+    into NaN/inf trees (the historic ``average_params`` failure mode —
+    it divided blindly). ``fisher`` aggregation feeds empirical Fisher
+    masses through here, where all-zero masses are a real input (empty
+    validation splits), so the rejection is a ``ValueError`` callers
+    can catch and map to a uniform fallback.
+    """
+    w = np.asarray(weights, np.float64)
+    if w.ndim != 1 or (n is not None and len(w) != n):
+        raise ValueError(
+            f"expected {n if n is not None else 'a 1-D vector of'} weights, "
+            f"got shape {w.shape}"
+        )
+    if len(w) == 0:
+        raise ValueError("no weights to normalize")
+    if not np.all(np.isfinite(w)):
+        raise ValueError(f"weights must be finite, got {w}")
+    if np.any(w < 0):
+        raise ValueError(f"weights must be non-negative, got {w}")
+    s = float(w.sum())
+    if s <= 1e-30:
+        raise ValueError(
+            f"weight sum {s} is zero/near-zero; cannot normalize (all "
+            "members carry no weight)"
+        )
+    return w / s
+
+
 def average_params(trees: Sequence, weights: Optional[Sequence[float]] = None):
-    """Weighted average of homogeneous pytrees (FedAvg-style one-shot)."""
+    """Weighted average of homogeneous pytrees (FedAvg-style one-shot).
+
+    Weights are validated through ``normalize_weights``: negative
+    weights and zero/near-zero weight sums raise instead of silently
+    producing sign-flipped or NaN parameter trees.
+    """
     if not trees:
         raise ValueError("no models to average")
     treedefs = {str(jax.tree.structure(t)) for t in trees}
@@ -39,8 +77,7 @@ def average_params(trees: Sequence, weights: Optional[Sequence[float]] = None):
         raise ValueError("parameter averaging requires identical leaf shapes")
     if weights is None:
         weights = [1.0 / len(trees)] * len(trees)
-    w = np.asarray(weights, np.float64)
-    w = w / w.sum()
+    w = normalize_weights(weights, len(trees))
     out = jax.tree.map(lambda x: x * w[0], trees[0])
     for wi, t in zip(w[1:], trees[1:]):
         out = jax.tree.map(lambda a, b, wi=wi: a + wi * b, out, t)
@@ -52,13 +89,48 @@ class LinearSVM:
     w: np.ndarray  # (d,)
     b: float
 
-    def predict(self, x: np.ndarray) -> np.ndarray:
+    def predict(self, x: np.ndarray, chunk: Optional[int] = None) -> np.ndarray:
+        """Decision scores w.x + b. ``chunk`` is accepted (and ignored)
+        so linear scorers are drop-in for the chunked ensemble predict
+        signature — a dense matvec needs no chunking."""
         return x @ self.w + self.b
 
     @property
     def nbytes(self) -> int:
         # repro: allow[wire-cost-honesty] reason=in-memory model footprint property, not a wire price
         return self.w.nbytes + 8
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedLinear:
+    """Packed serve form of a ``LinearSVM`` — the linear mirror of
+    ``core.ensemble.StackedEnsemble`` with the same ``score``/``k``/``d``
+    surface, so feature-statistics aggregates (``repro.agg``) deploy
+    through ``serve.EnsembleScorer`` and the fleet like any ensemble."""
+
+    w: np.ndarray  # (d,) float32
+    b: float
+
+    @property
+    def k(self) -> int:
+        return 1
+
+    @property
+    def n_max(self) -> int:
+        return 1
+
+    @property
+    def d(self) -> int:
+        return int(self.w.shape[0])
+
+    def score(self, x) -> np.ndarray:
+        """Mean member score for one query block. x: (b, d) -> (b,)."""
+        return np.asarray(x, np.float32) @ self.w + np.float32(self.b)
+
+    def predict(self, x: np.ndarray, chunk: int = 4096) -> np.ndarray:
+        from repro.core.ensemble import chunked_bucket_predict
+
+        return chunked_bucket_predict(self.score, x, chunk)
 
 
 @partial(jax.jit, static_argnames=("epochs",))

@@ -86,6 +86,11 @@ class ProtocolResult:
     # download wire form) — drop it straight into serve.EnsembleScorer
     student: Optional[object] = None
     student_codec: Optional[str] = None
+    # which repro.agg strategy combined the members, and the best
+    # cell's server scorer (deployable via serve/fleet when there is
+    # no distilled student)
+    aggregator: str = "mean"
+    server_scorer: Optional[object] = None
 
     def relative_gain_over_local(self) -> float:
         b = max(self.best.values())
@@ -138,8 +143,10 @@ def run_protocol(
     codec: str = "fp32",
     budget_bytes: Optional[int] = None,
     distill: Optional["DistillConfig"] = None,
+    aggregator: str = "mean",
 ) -> ProtocolResult:
     # deferred: repro.comm pulls core.selection back in at import time
+    from repro.agg import build_cell, get_aggregator
     from repro.comm import CommLedger, ModelExchange
     from repro.distill import DistillConfig
     from repro.sim.engine import train_population
@@ -169,6 +176,14 @@ def run_protocol(
     ledger = CommLedger()
     ex.record_metadata(ledger)
 
+    # server aggregation strategy (repro.agg); extras are computed from
+    # the by-id outcomes and recorded per canonical cell in the sweep
+    agg = get_aggregator(aggregator)
+    by_id = {d.device_id: d for d in devices}
+
+    def outcomes_for(want):
+        return by_id
+
     # --- local baseline (paper Fig. 1 "local") ---
     local_aucs = [
         roc_auc(d.splits["test"].y, d.local_test_scores) for d in devices
@@ -186,33 +201,43 @@ def run_protocol(
         ideal_mean, ideal_aucs = _mean_auc_over_devices(
             devices, ideal_model.predict)
 
-    # --- ensembles per strategy and k (evaluated on DECODED models) ---
+    # --- aggregated cells per strategy and k (DECODED models + DECODED
+    # extras; extras ride the ledger once per canonical cell, mirroring
+    # record_uploads) ---
     ensemble_auc: Dict[str, Dict[int, float]] = {}
+    cell_scorers: Dict[tuple, object] = {}
     for strat in strategies:
         ensemble_auc[strat] = {}
         strat_span = tracer.span("round.select", cat="round", strategy=strat)
         strat_span.__enter__()
         for k in ks:
+            extra_tag = f"agg_extra_{strat}_k{k}"
             if strat == "random":
                 trials = []
                 for t in range(random_trials):
                     tids = ex.pick("random", k, seed + 17 * t)
                     if not tids:
                         continue
-                    ens = Ensemble([ex.received(i) for i in tids])
+                    scorer = build_cell(agg, ex, tids, outcomes_for, ledger,
+                                        extra_tag, seed, record=False)
                     auc, _ = _mean_auc_over_devices(
-                        devices, partial(ens.predict, chunk=eval_chunk), eval_chunk)
+                        devices, partial(scorer.predict, chunk=eval_chunk), eval_chunk)
                     trials.append(auc)
                 if trials:
                     ensemble_auc[strat][k] = float(np.mean(trials))
                 ids = ex.pick("random", k, seed)
+                if ids:
+                    cell_scorers[(strat, k)] = build_cell(
+                        agg, ex, ids, outcomes_for, ledger, extra_tag, seed)
             else:
                 ids = ex.pick(strat, k, seed)
                 if not ids:
                     continue
-                ens = Ensemble([ex.received(i) for i in ids])
+                scorer = build_cell(agg, ex, ids, outcomes_for, ledger,
+                                    extra_tag, seed)
+                cell_scorers[(strat, k)] = scorer
                 auc, _ = _mean_auc_over_devices(
-                    devices, partial(ens.predict, chunk=eval_chunk), eval_chunk)
+                    devices, partial(scorer.predict, chunk=eval_chunk), eval_chunk)
                 ensemble_auc[strat][k] = auc
             ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
         strat_span.__exit__(None, None, None)
@@ -231,7 +256,14 @@ def run_protocol(
         "ideal": ideal_aucs,
         "full_ensemble": full_aucs,
     }
-    # --- optional distillation of the best ensemble (repro.distill) ---
+    # the best cell's server scorer — what the round actually deploys
+    # when no distillation compresses it further
+    server_scorer = None
+    if best:
+        bs = max(best, key=best.get)
+        bk = max(ensemble_auc[bs], key=ensemble_auc[bs].get)
+        server_scorer = cell_scorers.get((bs, bk))
+    # --- optional distillation of the best aggregated cell ---
     student_recv = None
     student_codec = None
     if distill.proxy_size > 0 and best:
@@ -240,13 +272,18 @@ def run_protocol(
         best_strat = max(best, key=best.get)
         best_k = max(ensemble_auc[best_strat], key=ensemble_auc[best_strat].get)
         ids = ex.pick(best_strat, best_k, seed)
-        ens = Ensemble([ex.received(i) for i in ids])
+        teacher = cell_scorers.get((best_strat, best_k))
+        if teacher is None:
+            teacher = build_cell(agg, ex, ids, outcomes_for, ledger,
+                                 f"agg_extra_{best_strat}_k{best_k}", seed,
+                                 record=False)
         # the distillation leg (proxy draw on its OWN SeedSequence
         # stream — independent of the ideal-subsample rng above —
         # solve, wire through the student codec, ledger) is shared with
         # run_population; devices decode ``dr.student``, so its AUC and
-        # its bytes match up
-        dr = distill_round(ens.predict, devices, distill, seed, codec_spec,
+        # its bytes match up. The teacher is the AGGREGATED scorer, so
+        # non-mean strategies distill what they actually serve.
+        dr = distill_round(teacher.predict, devices, distill, seed, codec_spec,
                            ledger, dim=dataset.dim)
         student_recv, student_codec = dr.student, dr.codec
         dist_auc, dist_aucs = _mean_auc_over_devices(devices, student_recv.predict)
@@ -268,4 +305,6 @@ def run_protocol(
         codec=codec_spec,
         student=student_recv,
         student_codec=student_codec,
+        aggregator=agg.spec,
+        server_scorer=server_scorer,
     )

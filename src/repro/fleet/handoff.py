@@ -2,8 +2,9 @@
 
 ``serve_round_artifact`` takes the model a round produced (the
 distilled student off ``PopulationReport.student`` /
-``ProtocolResult.student``, or a selected ``Ensemble``) and runs it
-through the FULL deployment path:
+``ProtocolResult.student``, a selected ``Ensemble``, or the aggregated
+server scorer off ``.server_scorer`` — weighted/linear aggregates from
+``repro.agg`` included) and runs it through the FULL deployment path:
 
     encode(model)  ──►  checkpoint.manager.save_payload (wire blob as
          │              an npz checkpoint — the round's persisted form)
@@ -42,10 +43,18 @@ BATCH_SLO = TenantSLO(deadline_ms=100.0, priority=0, quota=512)
 
 def _wire_codec(model) -> str:
     """The codec a round artifact re-encodes under: int8 payloads keep
-    their wire form, everything else ships lossless."""
+    their wire form (a QuantizedSVM, or an ensemble whose members all
+    are), everything else ships lossless."""
     from repro.comm.wire import QuantizedSVM
+    from repro.core.ensemble import Ensemble
 
-    return "int8" if isinstance(model, QuantizedSVM) else "fp32"
+    if isinstance(model, QuantizedSVM):
+        return "int8"
+    if isinstance(model, Ensemble) and model.members and all(
+        isinstance(m, QuantizedSVM) for m in model.members
+    ):
+        return "int8"
+    return "fp32"
 
 
 def serve_round_artifact(
@@ -67,9 +76,14 @@ def serve_round_artifact(
     serves exactly what a consumer restoring the round's checkpoint
     would score. Returns the fleet summary dict plus the handoff
     config."""
+    from repro.agg import WeightedEnsemble
     from repro.checkpoint.manager import save_payload
     from repro.comm.wire import encode
 
+    # a weighted aggregate (repro.agg) deploys as its equivalent plain
+    # ensemble — coef-scaled members encode/serve like any mean ensemble
+    if isinstance(model, WeightedEnsemble):
+        model = model.as_ensemble()
     codec = _wire_codec(model)
     blob = encode(model, codec)
 

@@ -39,11 +39,16 @@ byte totals. ``--distill-proxy N`` distills the best selected ensemble
 through ``repro.distill`` (``--distill-solver dense|cg|nystrom|auto``,
 ``--proxy-source validation|public|gaussian|scenario``,
 ``--student-codec`` for an independent download codec).
-``--serve-fleet`` then deploys the distilled student behind the
-multi-tenant serve fleet (``repro.fleet``) — wire blob -> checkpoint ->
-tenant registry -> simulated open-loop load — and appends the SLO
-metrics (latency percentiles, goodput, shed rate) to the report under
-``"fleet"``.
+``--aggregator mean | fisher | reweight[:T] | feature_stats`` selects
+the server aggregation strategy from the ``repro.agg`` registry; any
+side payload a strategy needs (Fisher diagonals, validation columns,
+feature moments) is wire-encoded and priced on the ledger under
+``kind=agg_extra``. ``--serve-fleet`` then deploys the round's artifact
+behind the multi-tenant serve fleet (``repro.fleet``) — the distilled
+student when distillation ran, otherwise the chosen aggregator's server
+scorer — wire blob -> checkpoint -> tenant registry -> simulated
+open-loop load — and appends the SLO metrics (latency percentiles,
+goodput, shed rate) to the report under ``"fleet"``.
 """
 from __future__ import annotations
 
@@ -99,6 +104,7 @@ def run_sim(args) -> dict:
         scenario_params=params,
         codec=args.codec,
         budget_bytes=args.budget_bytes,
+        aggregator=args.aggregator,
         distill=distill,
     )
 
@@ -144,6 +150,7 @@ def run_sim(args) -> dict:
         "devices_per_second": report.devices_per_second,
         "codec": report.codec,
         "budget_bytes": report.budget_bytes,
+        "aggregator": report.aggregator,
         "comm": report.comm,
     }
     if report.student is not None:
@@ -155,10 +162,16 @@ def run_sim(args) -> dict:
             s: dict(v) for s, v in report.time_to_aggregate.items()
         }
     if args.serve_fleet:
-        if report.student is None:
+        # deploy what the round actually produced: the distilled
+        # student when distillation ran, otherwise the chosen
+        # aggregator's server scorer (the best selected cell)
+        artifact = report.student if report.student is not None \
+            else report.server_scorer
+        if artifact is None:
             raise SystemExit(
-                "--serve-fleet deploys the round's distilled student: "
-                "run with --distill-proxy N (N > 0) so the round produces one"
+                "--serve-fleet deploys the round's artifact (distilled "
+                "student or aggregated server scorer), but the round "
+                "produced neither — no selection cell had any members"
             )
         from repro.fleet import serve_round_artifact
 
@@ -166,11 +179,14 @@ def run_sim(args) -> dict:
         # fleet path and measure it under load (simulated time: this
         # adds metrics, not wall-clock minutes)
         out["fleet"] = serve_round_artifact(
-            report.student,
+            artifact,
             seed=args.seed,
             horizon_ms=args.fleet_horizon_ms,
             load=args.fleet_load,
             tracer=fleet_tracer,
+        )
+        out["fleet"]["handoff"]["artifact"] = (
+            "student" if report.student is not None else "server_scorer"
         )
     # the schema-versioned observability envelope: registry counters
     # (engine chunks/groups/devices) + the round's exact comm ledger
@@ -219,6 +235,11 @@ def main(argv=None):
     ap.add_argument("--budget-bytes", type=int, default=None,
                     help="sim mode: upload byte budget per selection "
                          "(strategy-rank greedy knapsack over encoded sizes)")
+    ap.add_argument("--aggregator", default="mean",
+                    help="sim mode: server aggregation strategy from the "
+                         "repro.agg registry (mean | fisher | "
+                         "reweight[:T] | feature_stats); extras ride "
+                         "the ledger under kind=agg_extra")
     ap.add_argument("--distill-proxy", type=int, default=0,
                     help="sim mode: distill the best ensemble on this "
                          "many proxy points (0 disables)")
@@ -232,10 +253,11 @@ def main(argv=None):
                     help="sim mode: student download codec "
                          "(default: the round's --codec)")
     ap.add_argument("--serve-fleet", action="store_true",
-                    help="sim mode: after the round, deploy the distilled "
-                         "student behind the multi-tenant serve fleet "
-                         "(repro.fleet) and report SLO metrics under load "
-                         "(requires --distill-proxy)")
+                    help="sim mode: after the round, deploy its artifact "
+                         "behind the multi-tenant serve fleet (repro.fleet) "
+                         "and report SLO metrics under load — the distilled "
+                         "student when --distill-proxy ran, otherwise the "
+                         "chosen --aggregator's server scorer")
     ap.add_argument("--fleet-horizon-ms", type=float, default=250.0,
                     help="--serve-fleet: simulated traffic window (ms)")
     ap.add_argument("--fleet-load", type=float, default=1.0,

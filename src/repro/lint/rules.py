@@ -192,8 +192,8 @@ def kernel_registry_bypass(ctx: FileContext) -> Iterator[Violation]:
 
 @rule(
     "wire-cost-honesty",
-    "no .nbytes / pickle-length payload sizing; wire cost is "
-    "len(encode(...)) or svm_wire_nbytes",
+    "no .nbytes / .itemsize / pickle-length payload sizing; wire cost "
+    "is len(encode(...)) or the shape pricers",
     blessed=(
         "repro/comm/ledger.py",     # CommEvent carries the priced nbytes field
         "repro/checkpoint/",        # manifest sizes are storage, not comm
@@ -206,12 +206,16 @@ def wire_cost_honesty(ctx: FileContext) -> Iterator[Violation]:
 
     The paper's communication claim is only auditable because every
     ledger entry equals ``len(encode(payload))`` (or its shape-priced
-    twin ``svm_wire_nbytes``, proven equal in tests). ``array.nbytes``
-    is the in-memory fp32 footprint — it over-counts an int8 upload
-    4x — and pickled length prices the pickle protocol, not the wire
-    format. The ledger module itself (whose events carry an ``nbytes``
-    field) and checkpoint manifests (in-memory accounting, not comm)
-    are blessed; tests assert on recorded ledger fields.
+    twins ``svm_wire_nbytes`` / ``agg_extra_wire_nbytes``, proven equal
+    in tests). ``array.nbytes`` is the in-memory fp32 footprint — it
+    over-counts an int8 upload 4x — ``dtype.itemsize`` arithmetic
+    rebuilds that same in-memory price by hand (an aggregator extra
+    priced as ``count * itemsize`` misses headers, names, and int8
+    scale/zero columns), and pickled length prices the pickle protocol,
+    not the wire format. The ledger module itself (whose events carry
+    an ``nbytes`` field) and checkpoint manifests (in-memory
+    accounting, not comm) are blessed; tests assert on recorded ledger
+    fields.
     """
     for node in ctx.walk():
         if (
@@ -223,7 +227,19 @@ def wire_cost_honesty(ctx: FileContext) -> Iterator[Violation]:
                 node, "wire-cost-honesty",
                 "`.nbytes` is the in-memory array size, not the wire "
                 "cost; price payloads with len(encode(...)) or "
-                "comm.wire.svm_wire_nbytes",
+                "comm.wire.svm_wire_nbytes/agg_extra_wire_nbytes",
+            )
+        elif (
+            isinstance(node, ast.Attribute)
+            and node.attr == "itemsize"
+            and isinstance(node.ctx, ast.Load)
+        ):
+            yield ctx.violation(
+                node, "wire-cost-honesty",
+                "`.itemsize` arithmetic hand-rolls the in-memory array "
+                "size, not the wire cost (headers, names, and int8 "
+                "scale/zero columns are missing); price payloads with "
+                "len(encode(...)) or the comm.wire shape pricers",
             )
         elif isinstance(node, ast.Call):
             dotted = dotted_name(node.func) or ""

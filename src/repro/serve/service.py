@@ -21,14 +21,23 @@ from repro.utils.metrics import GroupedAUC, streaming_grouped_auc
 
 def _pack(ensemble):
     """Normalize any servable model form to a packed stacked ensemble."""
+    from repro.agg import WeightedEnsemble
     from repro.comm.wire import QuantizedStackedEnsemble, QuantizedSVM
+    from repro.core.averaging import LinearSVM, StackedLinear
 
-    if isinstance(ensemble, (StackedEnsemble, QuantizedStackedEnsemble)):
+    if isinstance(ensemble, (StackedEnsemble, QuantizedStackedEnsemble, StackedLinear)):
         return ensemble
     if isinstance(ensemble, SVMModel):
         return StackedEnsemble.from_members([ensemble])
     if isinstance(ensemble, QuantizedSVM):
         return QuantizedStackedEnsemble.from_members([ensemble])
+    if isinstance(ensemble, LinearSVM):
+        # linear aggregates (feature_stats / fused fisher) serve through
+        # the packed linear mirror of StackedEnsemble
+        return StackedLinear(w=np.asarray(ensemble.w, np.float32), b=float(ensemble.b))
+    if isinstance(ensemble, WeightedEnsemble):
+        # weighted aggregates serve as their coef-scaled plain ensemble
+        return _pack(ensemble.as_ensemble())
     if isinstance(ensemble, Ensemble):
         if ensemble.members and all(
             isinstance(m, QuantizedSVM) for m in ensemble.members

@@ -24,8 +24,9 @@ from typing import Callable, Dict, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.agg import build_cell, get_aggregator
 from repro.comm import CommLedger, ModelExchange, StreamExchange
-from repro.core.ensemble import Ensemble
+from repro.comm.wire import agg_extra_wire_nbytes
 from repro.obs.trace import current_tracer, stopwatch
 from repro.core.selection import ReportColumns
 from repro.distill import DistillConfig, distill_round
@@ -67,6 +68,8 @@ class PopulationConfig:
     # communication (repro.comm)
     codec: str = "fp32"             # wire codec for model uploads
     budget_bytes: Optional[int] = None  # per-selection upload byte cap
+    # server aggregation strategy (repro.agg registry spec)
+    aggregator: str = "mean"
     # server-side distillation (repro.distill); None disables
     distill: Optional[DistillConfig] = None
 
@@ -94,6 +97,11 @@ class PopulationReport:
     # repro.serve.EnsembleScorer), and its download codec
     student: Optional[object] = None
     student_codec: Optional[str] = None
+    # which repro.agg strategy combined the members, and the best
+    # cell's server scorer (what --serve-fleet deploys when there is
+    # no distilled student)
+    aggregator: str = "mean"
+    server_scorer: Optional[object] = None
 
     @property
     def best(self) -> Dict[str, float]:
@@ -191,7 +199,15 @@ def run_population(
         )
         return ga.mean()
 
+    # server aggregation strategy (repro.agg); extras are computed from
+    # the by-id outcomes and recorded per cell next to the uploads
+    agg = get_aggregator(cfg.aggregator)
+
+    def outcomes_for(want):
+        return by_id
+
     ensemble_auc: Dict[str, Dict[int, float]] = {}
+    cell_scorers: Dict[tuple, object] = {}
     time_to_aggregate: Dict[str, Dict[int, float]] = {}
     for strat in cfg.strategies:
         ensemble_auc[strat] = {}
@@ -202,9 +218,11 @@ def run_population(
                 if not ids:
                     continue
                 ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
-                ens = Ensemble([ex.received(i) for i in ids])
+                scorer = build_cell(agg, ex, ids, outcomes_for, ledger,
+                                    f"agg_extra_{strat}_k{k}", cfg.seed)
+                cell_scorers[(strat, k)] = scorer
                 ensemble_auc[strat][k] = mean_auc(
-                    partial(ens.predict, chunk=cfg.eval_chunk)
+                    partial(scorer.predict, chunk=cfg.eval_chunk)
                 )
                 if federation.channel is not None:
                     time_to_aggregate[strat][k] = (
@@ -224,15 +242,14 @@ def run_population(
     }
     if cfg.distill is not None and cfg.distill.proxy_size > 0 and best_cells:
         best_strat, best_k = max(best_cells, key=best_cells.get)
-        ids = ex.pick(best_strat, best_k, cfg.seed)
-        ens = Ensemble([ex.received(i) for i in ids])
+        teacher = cell_scorers[(best_strat, best_k)]
         defaults = {}
         if cfg.distill.proxy == "scenario":
             # default the sampler to THIS federation's generating process
             defaults = {"scenario": cfg.scenario,
                         "mean_samples": cfg.mean_samples,
                         **dict(cfg.scenario_params)}
-        dr = distill_round(ens.predict, outcomes, cfg.distill, cfg.seed,
+        dr = distill_round(teacher.predict, outcomes, cfg.distill, cfg.seed,
                            ex.codec, ledger, dim=cfg.dim,
                            default_proxy_params=defaults)
         student, student_codec = dr.student, dr.codec
@@ -242,6 +259,11 @@ def run_population(
         log.info("%s/distilled (solver=%s, proxy=%s, codec=%s): %s",
                  ds.name, cfg.distill.solver, cfg.distill.proxy,
                  student_codec, ensemble_auc["distilled"])
+
+    server_scorer = None
+    if best_cells:
+        bs, bk = max(best_cells, key=best_cells.get)
+        server_scorer = cell_scorers.get((bs, bk))
 
     return PopulationReport(
         scenario=cfg.scenario,
@@ -263,6 +285,8 @@ def run_population(
         ledger=ledger,
         student=student,
         student_codec=student_codec,
+        aggregator=agg.spec,
+        server_scorer=server_scorer,
     )
 
 
@@ -343,16 +367,43 @@ def _run_streamed(
     log.info("streamed %d devices in %.2fs (chunk=%d)",
              len(cols), train_s, cfg.chunk_devices)
 
+    # regeneration cache shared by the model provider and the extras
+    # fetcher: a selected device is rebuilt ONCE (train_selected) and
+    # its full outcome reused for both the upload and the agg extra
+    regen: Dict[int, "DeviceOutcome"] = {}
+
+    def _regenerate(want: Sequence[int]) -> None:
+        missing = [int(i) for i in want if int(i) not in regen]
+        if missing:
+            regen.update(train_selected(stream, missing, lam=cfg.lam,
+                                        seed=cfg.seed, shards=cfg.mesh_shards))
+
     def provider(want: Sequence[int]) -> Dict[int, object]:
-        outs = train_selected(stream, want, lam=cfg.lam, seed=cfg.seed,
-                              shards=cfg.mesh_shards)
-        return {i: o.model for i, o in outs.items()}
+        _regenerate(want)
+        return {int(i): regen[int(i)].model for i in want}
+
+    def outcomes_for(want: Sequence[int]) -> Dict[int, object]:
+        _regenerate(want)
+        return regen
 
     with tracer.span("round.encode", cat="round", codec=cfg.codec):
         ex = StreamExchange(cols, provider, dim=stream.dim, codec=cfg.codec,
                             budget_bytes=cfg.budget_bytes)
     ledger = CommLedger(compact=True)
     ex.record_metadata(ledger)
+
+    # server aggregation strategy (repro.agg). Extras are ledgered at
+    # the SHAPE price (wire.agg_extra_wire_nbytes over the scalar
+    # columns — the svm_wire_nbytes pattern); tests pin that price to
+    # len(encode()), which keeps this ledger bitwise-equal to the
+    # materialized round's.
+    agg = get_aggregator(cfg.aggregator)
+
+    def extra_nbytes(device_id: int) -> int:
+        p = int(np.searchsorted(cols.ids, device_id))
+        shapes = agg.extra_shapes(int(cols.n_train[p]), int(n_val[p]),
+                                  stream.dim)
+        return agg_extra_wire_nbytes(shapes, ex.codec)
 
     # seeded, capped eval subsample — the same draw as the materialized
     # round; only these <= eval_device_cap devices' splits are rebuilt
@@ -376,6 +427,7 @@ def _run_streamed(
 
     channel = stream.channel
     ensemble_auc: Dict[str, Dict[int, float]] = {}
+    cell_scorers: Dict[tuple, object] = {}
     time_to_aggregate: Dict[str, Dict[int, float]] = {}
     for strat in cfg.strategies:
         ensemble_auc[strat] = {}
@@ -386,9 +438,12 @@ def _run_streamed(
                 if not ids:
                     continue
                 ex.record_uploads(ledger, ids, f"upload_{strat}_k{k}")
-                ens = Ensemble([ex.received(i) for i in ids])
+                scorer = build_cell(agg, ex, ids, outcomes_for, ledger,
+                                    f"agg_extra_{strat}_k{k}", cfg.seed,
+                                    extra_nbytes=extra_nbytes)
+                cell_scorers[(strat, k)] = scorer
                 ensemble_auc[strat][k] = mean_auc(
-                    partial(ens.predict, chunk=cfg.eval_chunk)
+                    partial(scorer.predict, chunk=cfg.eval_chunk)
                 )
                 if channel is not None:
                     time_to_aggregate[strat][k] = channel.time_to_aggregate(
@@ -403,8 +458,7 @@ def _run_streamed(
     }
     if cfg.distill is not None and cfg.distill.proxy_size > 0 and best_cells:
         best_strat, best_k = max(best_cells, key=best_cells.get)
-        ids = ex.pick(best_strat, best_k, cfg.seed)
-        ens = Ensemble([ex.received(i) for i in ids])
+        teacher = cell_scorers[(best_strat, best_k)]
         defaults = {}
         if cfg.distill.proxy == "scenario":
             defaults = {"scenario": cfg.scenario,
@@ -423,7 +477,7 @@ def _run_streamed(
             }
             return {p: regen[i][split].x for p, i in want.items()}
 
-        dr = distill_round(ens.predict, None, cfg.distill, cfg.seed,
+        dr = distill_round(teacher.predict, None, cfg.distill, cfg.seed,
                            ex.codec, ledger, dim=cfg.dim,
                            default_proxy_params=defaults,
                            split_counts=split_counts, fetch_split=fetch_split)
@@ -434,6 +488,11 @@ def _run_streamed(
         log.info("%s/distilled (solver=%s, proxy=%s, codec=%s): %s",
                  name, cfg.distill.solver, cfg.distill.proxy,
                  student_codec, ensemble_auc["distilled"])
+
+    server_scorer = None
+    if best_cells:
+        bs, bk = max(best_cells, key=best_cells.get)
+        server_scorer = cell_scorers.get((bs, bk))
 
     return PopulationReport(
         scenario=cfg.scenario,
@@ -453,4 +512,6 @@ def _run_streamed(
         ledger=ledger,
         student=student,
         student_codec=student_codec,
+        aggregator=agg.spec,
+        server_scorer=server_scorer,
     )

@@ -13,3 +13,9 @@ def pickle_priced(update):
 
 def interpreter_priced(update):
     return sys.getsizeof(update)
+
+
+def itemsize_priced(extra):
+    # hand-rolled in-memory price for an aggregator extra: misses the
+    # wire header, array names, and int8 scale/zero columns
+    return sum(a.size * a.dtype.itemsize for a in extra.arrays.values())

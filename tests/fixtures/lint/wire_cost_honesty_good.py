@@ -1,5 +1,5 @@
 """Known-good corpus for wire-cost-honesty: exact encoded sizes."""
-from repro.comm.wire import encode, svm_wire_nbytes
+from repro.comm.wire import agg_extra_wire_nbytes, encode, svm_wire_nbytes
 
 
 def encoded_price(model, codec):
@@ -8,3 +8,7 @@ def encoded_price(model, codec):
 
 def shape_price(n, d, codec):
     return svm_wire_nbytes(n, d, codec)
+
+
+def extra_shape_price(shapes, codec):
+    return agg_extra_wire_nbytes(shapes, codec)

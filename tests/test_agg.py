@@ -1,0 +1,534 @@
+"""repro.agg battery: registry contracts, AggExtra wire honesty, and
+property tests locking every strategy to the paper's mean fallbacks.
+
+Three bars, complementing the cross-engine matrix in test_engines.py:
+
+  * registry — specs round-trip, unknown names/params fail loudly,
+    duplicate registration is rejected.
+  * wire honesty — ``len(encode(extra, codec))`` equals the shape
+    pricer ``agg_extra_wire_nbytes`` for every codec, on synthetic
+    shapes AND on the extras real trained devices actually emit (the
+    streamed tier prices from shapes without regenerating devices, so
+    this identity is what keeps its ledger bitwise-equal to loop's).
+  * properties — ``mean`` is bitwise the historic ``Ensemble``;
+    reweight weights live on the simplex and uniform weights
+    short-circuit to the bitwise mean; every degenerate input (empty
+    pools, zero Fisher mass, missing classes) falls back to mean/zero,
+    never NaN.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.agg import (
+    AGGREGATOR_REGISTRY,
+    FeatureStatsAggregator,
+    FisherAggregator,
+    MeanAggregator,
+    ReweightAggregator,
+    WeightedEnsemble,
+    aggregator,
+    build_cell,
+    fisher_fuse_linear,
+    get_aggregator,
+)
+from repro.comm.wire import (
+    AggExtra,
+    CODECS,
+    agg_extra_wire_nbytes,
+    decode,
+    encode,
+)
+from repro.core.averaging import LinearSVM, normalize_weights
+from repro.core.ensemble import Ensemble
+from repro.core.svm import ConstantModel, SVMModel
+from repro.data.federated import DeviceData
+from repro.sim import make_federation, train_population
+from repro.sim.engine import DeviceOutcome
+from repro.utils.metrics import roc_auc
+from repro.utils.seeds import derive_stream_seed
+
+DIM = 5
+EXTRA_AGGS = tuple(
+    name for name, cls in sorted(AGGREGATOR_REGISTRY.items()) if cls.needs_extra
+)
+
+
+# ----------------------------------------------------------------------
+# synthetic fixtures
+# ----------------------------------------------------------------------
+
+def _split(rng, n, dim=DIM):
+    return DeviceData(
+        x=rng.standard_normal((n, dim)).astype(np.float32),
+        y=np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32),
+    )
+
+
+def _outcome(seed, device_id=0, n_train=12, n_val=9, dim=DIM):
+    """A DeviceOutcome shaped like the engines', without training."""
+    rng = np.random.default_rng(seed)
+    splits = {k: _split(rng, n, dim) for k, n in
+              (("train", n_train), ("val", n_val), ("test", 7))}
+    model = LinearSVM(w=rng.standard_normal(dim).astype(np.float32), b=0.1)
+    return DeviceOutcome(
+        device_id=device_id, splits=splits, model=model, report=None,
+        val_scores=np.asarray(model.predict(splits["val"].x)),
+        local_test_scores=np.asarray(model.predict(splits["test"].x)),
+    )
+
+
+def _members(seed, k=3, kind="linear", n=11, dim=DIM):
+    rng = np.random.default_rng(seed)
+    if kind == "linear":
+        return [LinearSVM(w=rng.standard_normal(dim).astype(np.float32),
+                          b=float(rng.standard_normal()))
+                for _ in range(k)]
+    return [SVMModel(support_x=rng.standard_normal((n, dim)).astype(np.float32),
+                     coef=(rng.standard_normal(n) * 0.1).astype(np.float32),
+                     gamma=0.3)
+            for _ in range(k)]
+
+
+@functools.lru_cache(maxsize=None)
+def _trained_outcomes():
+    """Real engine outcomes, for pricing extras the round actually ships."""
+    fed = make_federation("dirichlet", n_devices=6, seed=5,
+                          mean_samples=50, min_samples=40)
+    pop = train_population(fed.dataset, mode="loop", seed=2)
+    return fed.dataset.dim, pop.outcomes
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+
+def test_registry_contains_the_zoo_in_classes():
+    assert AGGREGATOR_REGISTRY["mean"] is MeanAggregator
+    assert AGGREGATOR_REGISTRY["fisher"] is FisherAggregator
+    assert AGGREGATOR_REGISTRY["reweight"] is ReweightAggregator
+    assert AGGREGATOR_REGISTRY["feature_stats"] is FeatureStatsAggregator
+
+
+@pytest.mark.parametrize("name", sorted(AGGREGATOR_REGISTRY))
+def test_spec_round_trips(name):
+    a = get_aggregator(name)
+    assert a.name == name
+    assert get_aggregator(a.spec).spec == a.spec
+    assert get_aggregator(a) is a  # instances pass through
+
+
+def test_param_spec_selects_temperature():
+    a = get_aggregator("reweight:7.5")
+    assert a.temperature == 7.5
+    assert a.spec == "reweight:7.5"
+    assert get_aggregator("reweight").temperature == 20.0
+
+
+def test_unknown_aggregator_raises():
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        get_aggregator("federated_dreaming")
+
+
+def test_param_on_paramless_aggregator_raises():
+    with pytest.raises(ValueError, match="takes no parameter"):
+        get_aggregator("mean:2")
+
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError, match="duplicate aggregator"):
+        @aggregator("mean")
+        class Impostor(MeanAggregator):  # pragma: no cover - rejected
+            pass
+
+
+# ----------------------------------------------------------------------
+# AggExtra wire: round-trips, validation, and the price identity
+# ----------------------------------------------------------------------
+
+def test_agg_extra_fp32_round_trip_is_bitwise():
+    rng = np.random.default_rng(0)
+    extra = AggExtra({"fisher": rng.standard_normal(DIM).astype(np.float32),
+                      "vx": rng.standard_normal((4, DIM)).astype(np.float32)})
+    out = decode(encode(extra, "fp32"))
+    assert isinstance(out, AggExtra)
+    assert list(out.arrays) == list(extra.arrays)  # name + order preserved
+    for name in extra.arrays:
+        np.testing.assert_array_equal(out.arrays[name], extra.arrays[name])
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+def test_agg_extra_round_trip_every_codec(codec):
+    rng = np.random.default_rng(1)
+    extra = AggExtra({"a": rng.standard_normal((6, DIM)).astype(np.float32),
+                      "b": rng.standard_normal(3).astype(np.float32),
+                      "empty": np.zeros((0, 2), np.float32)})
+    out = decode(encode(extra, codec))
+    for name, arr in extra.arrays.items():
+        got = out.arrays[name]
+        assert got.shape == arr.shape and got.dtype == np.float32
+        if arr.size:
+            np.testing.assert_allclose(got, arr, atol=0.05)
+
+
+def test_agg_extra_validation():
+    ok = np.zeros(2, np.float32)
+    with pytest.raises(ValueError):
+        AggExtra({"": ok})                        # empty name
+    with pytest.raises(ValueError):
+        AggExtra({"x" * 256: ok})                 # name too long for u8 len
+    with pytest.raises(ValueError):
+        AggExtra({"fishér": ok})                  # non-ASCII name
+    with pytest.raises(ValueError):
+        AggExtra({"s": np.float32(1.0)})          # 0-d scalar
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(["fp32", "fp16", "int8", "topk", "topk:0.5"]))
+def test_agg_extra_price_identity_fuzzed(seed, codec):
+    """The honesty bar: the shape pricer IS the encoded length, for any
+    arrays and any codec — including empty arrays and 1-d int8 (one
+    scale/zero column)."""
+    rng = np.random.default_rng(seed)
+    shapes = {}
+    arrays = {}
+    for i in range(int(rng.integers(1, 5))):
+        nd = int(rng.integers(1, 4))
+        shape = tuple(int(s) for s in rng.integers(0, 7, nd))
+        name = f"arr{i}"
+        shapes[name] = shape
+        arrays[name] = rng.standard_normal(shape).astype(np.float32)
+    extra = AggExtra(arrays)
+    assert len(encode(extra, codec)) == agg_extra_wire_nbytes(shapes, codec)
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+@pytest.mark.parametrize("name", EXTRA_AGGS)
+def test_price_identity_on_real_device_extras(name, codec):
+    """What the materialized round records (len of the encoded extra)
+    equals what the streamed round records (the pricer on the scalar
+    columns n_train/n_val/dim) — for every strategy, codec, device."""
+    dim, outcomes = _trained_outcomes()
+    agg = get_aggregator(name)
+    for o in outcomes:
+        extra = agg.device_extra(o, seed=2)
+        shapes = agg.extra_shapes(o.splits["train"].n, o.splits["val"].n, dim)
+        assert len(encode(extra, codec)) == agg_extra_wire_nbytes(shapes, codec)
+        # and the declared shapes are the emitted shapes
+        assert {k: v.shape for k, v in extra.arrays.items()} == shapes
+
+
+def test_device_extra_is_deterministic_per_seed():
+    """Extras derive all randomness from (seed, device_id): same seed
+    -> byte-identical wire blob; engines can regenerate them freely."""
+    dim, outcomes = _trained_outcomes()
+    o = outcomes[0]
+    for name in EXTRA_AGGS:
+        agg = get_aggregator(name)
+        a = encode(agg.device_extra(o, seed=3), "fp16")
+        b = encode(agg.device_extra(o, seed=3), "fp16")
+        assert a == b
+
+
+# ----------------------------------------------------------------------
+# mean: bitwise the historic Ensemble
+# ----------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 5))
+def test_mean_build_is_bitwise_ensemble(seed, k):
+    members = _members(seed, k=k, kind="svm")
+    probe = np.random.default_rng(
+        derive_stream_seed(seed, "agg-test-probe", 0)
+    ).standard_normal((17, DIM)).astype(np.float32)
+    built = MeanAggregator().build(members, [], seed)
+    assert type(built) is Ensemble
+    np.testing.assert_array_equal(built.predict(probe),
+                                  Ensemble(members).predict(probe))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 5))
+def test_uniform_weighted_ensemble_is_bitwise_mean(seed, k):
+    """k * (1/k) != 1.0 in floats — the uniform case must short-circuit
+    to the plain Ensemble, not scale by it."""
+    members = _members(seed, k=k, kind="svm")
+    probe = np.random.default_rng(
+        derive_stream_seed(seed, "agg-test-probe", 1)
+    ).standard_normal((9, DIM)).astype(np.float32)
+    we = WeightedEnsemble(members, np.full(k, 1.0 / k))
+    assert we.uniform
+    np.testing.assert_array_equal(we.predict(probe), Ensemble(members).predict(probe))
+
+
+def test_weighted_ensemble_matches_manual_weighted_sum():
+    members = _members(4, k=3, kind="svm")
+    w = np.array([0.6, 0.3, 0.1])
+    probe = np.random.default_rng(5).standard_normal((31, DIM)).astype(np.float32)
+    got = WeightedEnsemble(members, w).predict(probe)
+    want = sum(wi * np.asarray(m.predict(probe), np.float64)
+               for wi, m in zip(w, members))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_weighted_ensemble_rejects_bad_weights():
+    members = _members(6, k=2)
+    with pytest.raises(ValueError):
+        WeightedEnsemble(members, np.array([0.5, -0.5]))
+    with pytest.raises(ValueError):
+        WeightedEnsemble(members, np.array([0.0, 0.0]))
+    with pytest.raises(ValueError):
+        WeightedEnsemble(members, np.array([0.5]))  # wrong length
+
+
+def test_weighted_ensemble_wire_form_round_trips():
+    """as_ensemble() is the wire form: encode/decode it and the scores
+    survive (fp32 member payloads are lossless)."""
+    members = _members(7, k=3, kind="svm")
+    we = WeightedEnsemble(members, np.array([0.2, 0.5, 0.3]))
+    probe = np.random.default_rng(8).standard_normal((12, DIM)).astype(np.float32)
+    out = decode(encode(we.as_ensemble(), "fp32"))
+    np.testing.assert_array_equal(np.asarray(out.predict(probe)),
+                                  np.asarray(we.predict(probe)))
+
+
+def test_weighted_ensemble_rejects_unweightable_member():
+    class Opaque:
+        def predict(self, x):  # pragma: no cover - never reached
+            return np.zeros(len(x))
+
+    we = WeightedEnsemble([Opaque(), Opaque()], np.array([0.7, 0.3]))
+    with pytest.raises(TypeError, match="cannot weight"):
+        we.as_ensemble()
+
+
+def test_weighted_constant_member_scales_value():
+    we = WeightedEnsemble([ConstantModel(1.0), ConstantModel(3.0)],
+                          np.array([0.75, 0.25]))
+    probe = np.zeros((4, DIM), np.float32)
+    np.testing.assert_allclose(we.predict(probe), np.full(4, 1.5), atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# fisher
+# ----------------------------------------------------------------------
+
+def test_fisher_fuse_concentrated_mass_picks_that_member():
+    models = _members(9, k=2, kind="linear")
+    fishers = [np.ones(DIM), np.zeros(DIM)]
+    fused = fisher_fuse_linear(models, fishers)
+    np.testing.assert_allclose(fused.w, models[0].w, atol=1e-6)
+    assert fused.b == pytest.approx(models[0].b)
+
+
+def test_fisher_fuse_zero_mass_coordinate_falls_back_to_mean():
+    models = _members(10, k=3, kind="linear")
+    fishers = [np.ones(DIM) for _ in models]
+    for f in fishers:
+        f[2] = 0.0  # no curvature anywhere on coordinate 2
+    fused = fisher_fuse_linear(models, fishers)
+    mean_w = np.mean([m.w for m in models], axis=0)
+    assert fused.w[2] == pytest.approx(mean_w[2], abs=1e-6)
+
+
+def test_fisher_fuse_shape_mismatch_raises():
+    models = _members(11, k=2, kind="linear")
+    with pytest.raises(ValueError, match="shape mismatch"):
+        fisher_fuse_linear(models, [np.ones(DIM + 1), np.ones(DIM + 1)])
+
+
+def test_fisher_all_zero_mass_kernel_members_degrade_to_mean():
+    """Kernel members + zero Fisher mass everywhere (empty val splits)
+    -> uniform WeightedEnsemble -> bitwise the plain mean."""
+    members = _members(12, k=3, kind="svm")
+    extras = [AggExtra({"fisher": np.zeros(DIM, np.float32)}) for _ in members]
+    built = FisherAggregator().build(members, extras, seed=0)
+    assert isinstance(built, WeightedEnsemble) and built.uniform
+    probe = np.random.default_rng(13).standard_normal((8, DIM)).astype(np.float32)
+    np.testing.assert_array_equal(built.predict(probe),
+                                  Ensemble(members).predict(probe))
+
+
+def test_fisher_linear_members_use_parameter_fusion():
+    members = _members(14, k=3, kind="linear")
+    agg = FisherAggregator()
+    extras = [agg.device_extra(_outcome(20 + i, device_id=i), seed=1)
+              for i in range(3)]
+    built = agg.build(members, extras, seed=1)
+    assert isinstance(built, LinearSVM)
+
+
+def test_fisher_extra_is_nonnegative_curvature():
+    agg = FisherAggregator()
+    extra = agg.device_extra(_outcome(15), seed=0)
+    f = extra.arrays["fisher"]
+    assert f.shape == (DIM,) and np.all(f >= 0)
+
+
+# ----------------------------------------------------------------------
+# reweight
+# ----------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10**6))
+def test_reweight_weights_live_on_the_simplex(seed):
+    agg = ReweightAggregator()
+    members = _members(seed, k=4, kind="linear")
+    extras = [agg.device_extra(_outcome(seed + i, device_id=i), seed=seed)
+              for i in range(4)]
+    built = agg.build(members, extras, seed=seed)
+    assert isinstance(built, WeightedEnsemble)
+    assert np.all(built.weights >= 0)
+    assert built.weights.sum() == pytest.approx(1.0)
+
+
+def test_reweight_identical_members_degenerate_to_bitwise_mean():
+    """Equal AUCs -> softmax is exactly uniform -> the WeightedEnsemble
+    short-circuit makes the round bitwise the paper's mean."""
+    one = _members(16, k=1, kind="svm")[0]
+    members = [one, one, one]
+    agg = ReweightAggregator()
+    extras = [agg.device_extra(_outcome(30 + i, device_id=i), seed=2)
+              for i in range(3)]
+    built = agg.build(members, extras, seed=2)
+    assert built.uniform
+    probe = np.random.default_rng(17).standard_normal((11, DIM)).astype(np.float32)
+    np.testing.assert_array_equal(built.predict(probe),
+                                  Ensemble(members).predict(probe))
+
+
+def test_reweight_single_class_pool_degenerates_to_uniform():
+    agg = ReweightAggregator()
+    members = _members(18, k=2, kind="linear")
+    extras = []
+    for i in range(2):
+        o = _outcome(40 + i, device_id=i)
+        e = agg.device_extra(o, seed=3)
+        e.arrays["vy"] = np.ones_like(e.arrays["vy"])  # one class only
+        extras.append(e)
+    built = agg.build(members, extras, seed=3)
+    assert built.uniform
+
+
+def test_reweight_caps_and_seeds_the_row_subsample():
+    agg = ReweightAggregator()
+    o = _outcome(19, n_val=100)
+    e = agg.device_extra(o, seed=4)
+    assert e.arrays["vx"].shape == (agg.MAX_ROWS, DIM)
+    assert e.arrays["vy"].shape == (agg.MAX_ROWS,)
+    # shape pricer agrees with the cap
+    assert agg.extra_shapes(12, 100, DIM)["vx"] == (agg.MAX_ROWS, DIM)
+    # the subsample is a subset of the real validation rows
+    val_rows = {tuple(r) for r in np.asarray(o.splits["val"].x)}
+    assert all(tuple(r) in val_rows for r in e.arrays["vx"])
+
+
+def test_reweight_temperature_sharpens_weights():
+    members = _members(21, k=3, kind="linear")
+    extras = [ReweightAggregator().device_extra(_outcome(50 + i, device_id=i), seed=5)
+              for i in range(3)]
+    soft = get_aggregator("reweight:1").build(members, extras, seed=5)
+    sharp = get_aggregator("reweight:100").build(members, extras, seed=5)
+    assert sharp.weights.max() >= soft.weights.max()
+
+
+# ----------------------------------------------------------------------
+# feature_stats
+# ----------------------------------------------------------------------
+
+def _shifted_outcome(seed, device_id, shift=2.5, n=40):
+    """Two Gaussians separated along axis 0 — diag-LDA's home turf."""
+    rng = np.random.default_rng(seed)
+    y = np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32)
+    x = rng.standard_normal((n, DIM)).astype(np.float32)
+    x[:, 0] += shift * (y > 0)
+    splits = {"train": DeviceData(x=x, y=y),
+              "val": _split(rng, 6), "test": _split(rng, 6)}
+    model = ConstantModel(0.0)
+    return DeviceOutcome(device_id=device_id, splits=splits, model=model,
+                         report=None, val_scores=np.zeros(6, np.float32),
+                         local_test_scores=np.zeros(6, np.float32))
+
+
+def test_feature_stats_recovers_the_separating_direction():
+    agg = FeatureStatsAggregator()
+    outs = [_shifted_outcome(60 + i, i) for i in range(3)]
+    extras = [agg.device_extra(o, seed=6) for o in outs]
+    built = agg.build([], extras, seed=6)
+    assert isinstance(built, LinearSVM)
+    assert np.argmax(np.abs(built.w)) == 0  # the shifted axis dominates
+    probe = _shifted_outcome(99, 9)
+    tr = probe.splits["train"]
+    assert roc_auc(tr.y, built.predict(tr.x)) > 0.9
+
+
+def test_feature_stats_pooling_is_concatenation_invariant():
+    """Moments from two devices sum to the moments of their pooled
+    data: building from per-device extras == building from one merged
+    device (float64 pooling keeps this tight)."""
+    agg = FeatureStatsAggregator()
+    a, b = _shifted_outcome(70, 0), _shifted_outcome(71, 1)
+    merged = _shifted_outcome(72, 2)
+    merged.splits["train"] = DeviceData(
+        x=np.concatenate([a.splits["train"].x, b.splits["train"].x]),
+        y=np.concatenate([a.splits["train"].y, b.splits["train"].y]),
+    )
+    split_build = agg.build([], [agg.device_extra(a, 0), agg.device_extra(b, 0)], 0)
+    merged_build = agg.build([], [agg.device_extra(merged, 0)], 0)
+    np.testing.assert_allclose(split_build.w, merged_build.w, rtol=1e-3)
+
+
+def test_feature_stats_missing_class_yields_zero_scorer():
+    agg = FeatureStatsAggregator()
+    o = _shifted_outcome(73, 0)
+    o.splits["train"].y[:] = 1.0  # positive class only
+    built = agg.build([], [agg.device_extra(o, 0)], 0)
+    assert isinstance(built, LinearSVM)
+    np.testing.assert_array_equal(built.w, np.zeros(DIM, np.float32))
+    assert built.b == 0.0
+
+
+# ----------------------------------------------------------------------
+# build_cell: decoded extras + exact ledger pricing
+# ----------------------------------------------------------------------
+
+def test_build_cell_records_exact_encoded_bytes():
+    """The cell builder prices each extra at len(encode()) under
+    kind=agg_extra, and hands the server the DECODED extras (lossy
+    codecs pay their AUC cost on extras, like on models)."""
+    from repro.comm.exchange import ModelExchange
+    from repro.comm.ledger import CommLedger
+
+    dim, outcomes = _trained_outcomes()
+    by_id = {o.device_id: o for o in outcomes}
+    ids = sorted(by_id)[:3]
+    ex = ModelExchange({o.device_id: o.model for o in outcomes},
+                       [o.report for o in outcomes], codec="fp16")
+    agg = get_aggregator("fisher")
+    ledger = CommLedger()
+    built = build_cell(agg, ex, ids, lambda want: {i: by_id[i] for i in want},
+                       ledger, tag="agg_extra_test", seed=2)
+    want = sum(len(encode(agg.device_extra(by_id[i], 2), "fp16")) for i in ids)
+    assert ledger.total(kind="agg_extra") == want
+    assert ledger.as_dict()["agg_extra_test"] == want
+    assert built is not None
+
+
+def test_build_cell_mean_records_nothing():
+    from repro.comm.exchange import ModelExchange
+    from repro.comm.ledger import CommLedger
+
+    dim, outcomes = _trained_outcomes()
+    by_id = {o.device_id: o for o in outcomes}
+    ids = sorted(by_id)[:3]
+    ex = ModelExchange({o.device_id: o.model for o in outcomes},
+                       [o.report for o in outcomes], codec="fp16")
+    ledger = CommLedger()
+    built = build_cell(get_aggregator("mean"), ex, ids,
+                       lambda want: {i: by_id[i] for i in want},
+                       ledger, tag="agg_extra_test", seed=2)
+    assert ledger.total(kind="agg_extra") == 0
+    assert type(built) is Ensemble

@@ -26,6 +26,7 @@ import functools
 import numpy as np
 import pytest
 
+from repro.agg import AGGREGATOR_REGISTRY, get_aggregator
 from repro.data.partition import derive_device_seed
 from repro.sim import (
     PopulationConfig,
@@ -169,6 +170,86 @@ def test_round_matches_across_engines(scenario, codec):
             np.testing.assert_allclose(ca, cb, atol=1e-4)
     assert loop.student_codec == buck.student_codec == shard.student_codec
     assert strm.student_codec == buck.student_codec
+
+
+# ----------------------------------------------------------------------
+# aggregator column: every registered strategy, every tier
+# ----------------------------------------------------------------------
+
+AGGREGATORS = tuple(sorted(AGGREGATOR_REGISTRY))
+
+
+@functools.lru_cache(maxsize=None)
+def _agg_report(aggregator, engine):
+    cfg = PopulationConfig(
+        scenario="dirichlet", n_devices=N_DEVICES, seed=SEED, mean_samples=55,
+        min_samples=40, engine=engine, codec="fp16", ks=(3,),
+        strategies=("cv",), chunk_devices=CHUNK, aggregator=aggregator,
+    )
+    return run_population(cfg, federation=_federation("dirichlet"))
+
+
+def test_aggregator_registry_is_the_full_zoo():
+    assert set(AGGREGATORS) >= {"mean", "fisher", "reweight", "feature_stats"}
+
+
+@pytest.mark.parametrize("aggregator", AGGREGATORS)
+@pytest.mark.parametrize("engine", ("bucketed", "sharded", "streamed"))
+def test_aggregator_round_matches_loop(aggregator, engine):
+    """Every registered aggregator is engine-invariant: AUC tables,
+    the FULL ledger summary (including the agg_extra lane — the
+    streamed tier prices extras by shape, never encoding them), and
+    the deployed server scorer agree with the loop oracle. Bitwise on
+    the CI meshes; exact AUCs everywhere (rank statistics)."""
+    loop = _agg_report(aggregator, "loop")
+    cand = _agg_report(aggregator, engine)
+    assert loop.aggregator == cand.aggregator
+    assert loop.n_eligible == cand.n_eligible
+    assert loop.ensemble_auc == cand.ensemble_auc
+    assert loop.mean_val_auc == cand.mean_val_auc
+    # ledger honesty across tiers, to the byte, lane by lane
+    assert loop.comm == cand.comm
+    # the best-cell scorer --serve-fleet would deploy is the same model
+    assert type(loop.server_scorer) is type(cand.server_scorer)
+    probe = np.random.default_rng(0).standard_normal(
+        (32, _federation("dirichlet").dataset.dim)).astype(np.float32)
+    if _bitwise_mesh() or engine == "streamed":
+        np.testing.assert_array_equal(
+            loop.server_scorer.predict(probe), cand.server_scorer.predict(probe))
+    else:
+        np.testing.assert_allclose(
+            loop.server_scorer.predict(probe), cand.server_scorer.predict(probe),
+            atol=1e-4)
+
+
+@pytest.mark.parametrize("aggregator", AGGREGATORS)
+def test_aggregator_extra_lane_accounting(aggregator):
+    """Strategies that ship extras pay for them on the ledger; mean
+    ships nothing and its round is bitwise the pre-zoo round."""
+    rep = _agg_report(aggregator, "loop")
+    agg = get_aggregator(aggregator)
+    if agg.needs_extra:
+        assert rep.comm["total_agg_extra"] > 0
+    else:
+        assert rep.comm["total_agg_extra"] == 0
+    # extras ride the upload direction
+    assert rep.comm["total_up"] >= rep.comm["total_agg_extra"]
+
+
+def test_mean_aggregator_is_the_identity_on_the_round():
+    """aggregator='mean' must leave the historic round untouched:
+    same AUC table and same ledger as a config that never names an
+    aggregator at all."""
+    cfg = PopulationConfig(
+        scenario="dirichlet", n_devices=N_DEVICES, seed=SEED, mean_samples=55,
+        min_samples=40, engine="bucketed", codec="fp16", ks=(3,),
+        strategies=("cv",), chunk_devices=CHUNK,
+    )
+    implicit = run_population(cfg, federation=_federation("dirichlet"))
+    explicit = _agg_report("mean", "bucketed")
+    assert implicit.ensemble_auc == explicit.ensemble_auc
+    assert implicit.comm == explicit.comm
+    assert implicit.aggregator == explicit.aggregator == "mean"
 
 
 # ----------------------------------------------------------------------

@@ -223,6 +223,34 @@ def test_average_params_weighted():
     np.testing.assert_allclose(np.asarray(avg["w"]), 0.75)
 
 
+def test_average_params_rejects_degenerate_weights():
+    """The historic failure mode: a negative weight silently flips a
+    member's sign and a zero-sum turns the normalize into NaN trees.
+    Both now raise through normalize_weights."""
+    t1, t2 = {"w": jnp.zeros(3)}, {"w": jnp.ones(3)}
+    with pytest.raises(ValueError, match="non-negative"):
+        average_params([t1, t2], weights=[1.0, -1.0])
+    with pytest.raises(ValueError, match="sum"):
+        average_params([t1, t2], weights=[0.0, 0.0])
+    with pytest.raises(ValueError, match="finite"):
+        average_params([t1, t2], weights=[1.0, float("nan")])
+    with pytest.raises(ValueError):
+        average_params([t1, t2], weights=[1.0])  # wrong length
+
+
+def test_normalize_weights_projects_to_the_simplex():
+    from repro.core.averaging import normalize_weights
+
+    w = normalize_weights([2.0, 6.0])
+    assert w.dtype == np.float64
+    np.testing.assert_allclose(w, [0.25, 0.75])
+    assert w.sum() == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="1-D"):
+        normalize_weights(np.ones((2, 2)))
+    with pytest.raises(ValueError, match="sum"):
+        normalize_weights([1e-33, 1e-33])  # near-zero sum, not just exact zero
+
+
 def test_one_shot_linear_averaging_runs(rng):
     models = []
     for i in range(4):

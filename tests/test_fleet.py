@@ -374,14 +374,57 @@ def test_fed_run_cli_serve_fleet(tmp_path):
     fleet = out["fleet"]
     assert fleet["global"]["conserved"]
     assert fleet["handoff"]["load_x_capacity"] == 1.5
+    assert fleet["handoff"]["artifact"] == "student"
     assert set(fleet["tenants"]) == {"premium", "batch"}
     # the report (fleet section included) serializes cleanly
     assert json.loads((tmp_path / "report.json").read_text())["fleet"]
 
 
-def test_fed_run_serve_fleet_requires_distill():
+def test_fed_run_serve_fleet_deploys_server_scorer_without_distill():
+    """No distilled student -> the fleet serves the aggregation round's
+    best-cell scorer instead of refusing (the pre-zoo SystemExit)."""
     from repro.launch.fed_run import main
 
-    with pytest.raises(SystemExit, match="distill-proxy"):
-        main(["--mode", "sim", "--scenario", "iid", "--devices", "12",
-              "--k", "4", "--serve-fleet"])
+    out = main(["--mode", "sim", "--scenario", "iid", "--devices", "12",
+                "--k", "4", "--serve-fleet", "--fleet-horizon-ms", "30",
+                "--aggregator", "fisher"])
+    assert out["aggregator"] == "fisher"
+    assert out["fleet"]["handoff"]["artifact"] == "server_scorer"
+    assert out["fleet"]["global"]["conserved"]
+    assert out["fleet"]["global"]["completed"] > 0
+
+
+def test_server_scorer_fleet_roundtrip(tmp_path):
+    """The wire blob the fleet checkpoints for an aggregation-round
+    scorer decodes to a model producing the live scorer's exact scores
+    (fp32 is lossless on SVM members, so the bar is bitwise)."""
+    from repro.checkpoint.manager import restore_payload
+    from repro.comm.wire import decode
+    from repro.distill import DistillConfig
+    from repro.sim import PopulationConfig, run_population
+
+    rep = run_population(PopulationConfig(
+        scenario="iid", n_devices=10, seed=1, mean_samples=50,
+        min_samples=40, ks=(3,), strategies=("cv",), aggregator="fisher"))
+    assert rep.server_scorer is not None and rep.student is None
+    out = serve_round_artifact(rep.server_scorer, seed=0, horizon_ms=30.0,
+                               checkpoint_dir=str(tmp_path / "round"))
+    deployed = decode(restore_payload(str(tmp_path / "round")))
+    assert len(restore_payload(str(tmp_path / "round"))) == out["handoff"]["wire_nbytes"]
+    probe = np.random.default_rng(7).standard_normal((24, 16)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(deployed.predict(probe)),
+        np.asarray(rep.server_scorer.predict(probe)))
+
+
+def test_serve_round_artifact_weighted_ensemble_int8():
+    """A non-uniform WeightedEnsemble of int8 members deploys through
+    its plain-Ensemble wire form in the members' own codec."""
+    from repro.agg import WeightedEnsemble
+    from repro.comm.wire import decode, encode
+
+    members = [decode(encode(m, "int8")) for m in _ensemble(seed=6).members]
+    we = WeightedEnsemble(members, np.array([0.6, 0.3, 0.1]))
+    out = serve_round_artifact(we, seed=0, horizon_ms=30.0)
+    assert out["handoff"]["codec"] == "int8"
+    assert out["global"]["conserved"] and out["global"]["completed"] > 0
